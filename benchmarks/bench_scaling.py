@@ -1,0 +1,190 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Figure 4 analogue: weak/strong scaling of MTL-par vs MTL-base.
+
+No GPUs/TPUs in the container, so the scaling study reports the quantities
+that DRIVE the paper's Fig. 4 curves, derived from compiled per-device SPMD
+programs at increasing device counts (paper layout: 5 sub-groups x M ranks):
+
+  * per-device collective bytes (gradient-sync volume — the term the paper
+    says dominates the runtime increase in weak scaling);
+  * resident parameter bytes per device (P_s + P_h vs P_s + N_h*P_h);
+  * per-device FLOPs (work per rank).
+
+Plus a REAL wall-clock microbenchmark of par-vs-base on 8 host CPU devices.
+
+Run as a subprocess (sets XLA device-count flag at import).
+"""
+import json
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.configs import get_smoke
+from repro.core import (MTPConfig, make_gfm_mtl, make_mtp_train_step,
+                        param_shardings, batch_shardings)
+from repro.core.taskpar import AdamLike_shardings
+from repro.data.synthetic_atoms import generate_all, to_batch_dict
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.optim import adamw
+
+N_TASKS = 5
+
+
+def _mesh(dp: int) -> Mesh:
+    devs = np.array(jax.devices()[: dp * N_TASKS]).reshape(dp, N_TASKS)
+    return Mesh(devs, ("data", "model"))
+
+
+def _sds(shapes, shardings):
+    return jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes, shardings)
+
+
+def lower_gfm(dp: int, mode: str, batch_per_task: int, cfg):
+    mesh = _mesh(dp)
+    model = make_gfm_mtl(cfg, N_TASKS)
+    mtp = MTPConfig(n_tasks=N_TASKS, mode=mode)
+    opt = adamw(1e-3)
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    p_shapes = jax.eval_shape(model.init, key)
+    p_shard = param_shardings(mesh, p_shapes, mtp)
+    p_sds = _sds(p_shapes, p_shard)
+    o_shapes = jax.eval_shape(opt.init, p_shapes)
+    o_sds = _sds(o_shapes, AdamLike_shardings(o_shapes, p_shard))
+    T, B, A, E = N_TASKS, batch_per_task, cfg.max_atoms, cfg.max_edges
+    bshapes = {
+        "species": jax.ShapeDtypeStruct((T, B, A), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((T, B, A, 3), jnp.float32),
+        "edge_src": jax.ShapeDtypeStruct((T, B, E), jnp.int32),
+        "edge_dst": jax.ShapeDtypeStruct((T, B, E), jnp.int32),
+        "node_mask": jax.ShapeDtypeStruct((T, B, A), jnp.bool_),
+        "edge_mask": jax.ShapeDtypeStruct((T, B, E), jnp.bool_),
+        "energy": jax.ShapeDtypeStruct((T, B), jnp.float32),
+        "forces": jax.ShapeDtypeStruct((T, B, A, 3), jnp.float32),
+    }
+    b_sds = _sds(bshapes, batch_shardings(mesh, bshapes, mtp))
+    step = make_mtp_train_step(model, opt, mtp)
+    lowered = jax.jit(step, donate_argnums=(0, 1)).lower(p_sds, o_sds, b_sds)
+    compiled = lowered.compile()
+    h = analyze_hlo(compiled.as_text())
+    # resident param bytes/device from shardings
+    def shard_bytes(shapes, shards):
+        tot = 0
+        for s, sh in zip(jax.tree_util.tree_leaves(shapes),
+                         jax.tree_util.tree_leaves(shards)):
+            n = int(np.prod(s.shape)) * s.dtype.itemsize
+            spec = sh.spec
+            denom = 1
+            for dim, entry in zip(s.shape, spec):
+                if entry is None:
+                    continue
+                axes = entry if isinstance(entry, tuple) else (entry,)
+                for a in axes:
+                    denom *= dict(zip(("data", "model"), (dp, N_TASKS)))[a]
+            tot += n // max(denom, 1)
+        return tot
+    pb = shard_bytes(p_shapes, p_shard)
+    return {"devices": dp * N_TASKS, "mode": mode, "batch_per_task": batch_per_task,
+            "coll_bytes_dev": h["collective_bytes"], "flops_dev": h["flops"],
+            "param_bytes_dev": pb,
+            "coll_detail": h["collectives"]}
+
+
+def structural_scaling(cfg):
+    rows = []
+    for dp in (4, 8, 16, 32, 64):
+        for mode in ("par", "base"):
+            # weak: constant per-device work (2 graphs per data rank)
+            rows.append(dict(lower_gfm(dp, mode, 10 * dp, cfg), regime="weak"))
+            # strong: constant global batch
+            rows.append(dict(lower_gfm(dp, mode, 320, cfg), regime="strong"))
+    return rows
+
+
+def measured_8dev(cfg, steps=12):
+    """Real wall-clock: par vs base on 8 host devices (2 data x 4 tasks)."""
+    global N_TASKS
+    saved = N_TASKS
+    N_TASKS = 4
+    try:
+        mesh = Mesh(np.array(jax.devices()[:8]).reshape(2, 4),
+                    ("data", "model"))
+        model = make_gfm_mtl(cfg, 4)
+        data = list(generate_all(64, max_atoms=cfg.max_atoms,
+                                 max_edges=cfg.max_edges).values())[:4]
+        bs = [to_batch_dict(sd, np.arange(32)) for sd in data]
+        batch = {k: jnp.stack([b[k] for b in bs]) for k in bs[0]}
+        out = {}
+        for mode in ("par", "base"):
+            mtp = MTPConfig(n_tasks=4, mode=mode)
+            opt = adamw(1e-3)
+            params = model.init(jax.random.PRNGKey(0))
+            st = opt.init(params)
+            ps = param_shardings(mesh, params, mtp)
+            params = jax.device_put(params, ps)
+            st = jax.device_put(st, AdamLike_shardings(st, ps))
+            bsh = batch_shardings(mesh, batch, mtp)
+            b = jax.device_put(batch, bsh)
+            step = jax.jit(make_mtp_train_step(model, opt, mtp))
+            params, st, l, _ = step(params, st, b)  # compile+warm
+            jax.block_until_ready(l)
+            t0 = time.time()
+            for _ in range(steps):
+                params, st, l, _ = step(params, st, b)
+            jax.block_until_ready(l)
+            out[mode] = (time.time() - t0) / steps
+        return out
+    finally:
+        N_TASKS = saved
+
+
+ALPHA = 1e-6   # per-hop collective latency (s) for the alpha-beta model
+LINK = 50e9
+
+
+def coll_time_model(row):
+    """alpha-beta ring model: t = sum over collectives of
+    2*(g-1)/g * bytes/bw + (g-1)*alpha, with g = the reduction-group size
+    (global for trunk/base, data-only for par heads — approximated by the
+    dominant group)."""
+    g = row["devices"] if row["mode"] == "base" else row["devices"] // N_TASKS
+    b = row["coll_bytes_dev"]
+    return 2 * (g - 1) / g * b / LINK + (g - 1) * ALPHA
+
+
+def main():
+    # paper-proportionate Case-2 ratio (section 4.3): N_h*P_h >> P_s
+    # (paper: P_s ~ 9M EGNN vs 5 branches x ~3.3M heads)
+    cfg = get_smoke("hydragnn-gfm").replace(gnn_hidden=64, head_hidden=256,
+                                            head_layers=3, n_tasks=5,
+                                            max_atoms=16, max_edges=96)
+    rows = structural_scaling(cfg)
+    wall = measured_8dev(cfg)
+    out = {"structural": rows, "measured_8dev_s": wall}
+    os.makedirs("results", exist_ok=True)
+    json.dump(out, open("results/scaling.json", "w"), indent=1)
+    print("name,us_per_call,derived")
+    for r in rows:
+        t = coll_time_model(r)
+        print(f"fig4_{r['regime']}/{r['mode']}/dev{r['devices']},"
+              f"{t * 1e6:.2f},"
+              f"coll_bytes={r['coll_bytes_dev']:.3e};"
+              f"param_bytes={r['param_bytes_dev']:.3e};"
+              f"flops={r['flops_dev']:.3e}")
+    print(f"fig4_measured_8dev,{wall['par'] * 1e6:.0f},"
+          f"par={wall['par']:.4f}s;base={wall['base']:.4f}s;"
+          f"speedup={wall['base'] / wall['par']:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

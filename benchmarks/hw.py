@@ -1,0 +1,6 @@
+"""Target-hardware constants (TPU v5e), used by every roofline computation."""
+PEAK_FLOPS_BF16 = 197e12     # per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+CHIPS_POD = 256              # 16 x 16
+HBM_BYTES = 16 * 2 ** 30     # v5e HBM capacity

@@ -1,0 +1,157 @@
+"""Roofline analysis from the compiled dry-run (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape) on the single-pod mesh:
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s        [s]
+    memory term     = HLO_traffic_per_device / HBM_bw           [s]
+    collective term = collective_bytes_per_device / link_bw     [s]
+(the dry-run HLO is the per-device SPMD program, so per-device numbers over
+per-chip rates are the pod-synchronous step-time estimates).
+
+Also reports MODEL_FLOPS (6ND train / 2ND prefill / 2ND decode, N_active for
+MoE) and the usefulness ratio MODEL_FLOPS / (HLO_FLOPs x chips).
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.hw import CHIPS_POD, HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+
+def model_flops(arch: str, shape_name: str) -> tuple[float, float]:
+    """(MODEL_FLOPS, N_used). Uses eval_shape param counts; MoE counts only
+    active experts (top_k + shared) per token."""
+    import jax
+    import jax.numpy as jnp
+    from repro import configs
+    cfg = configs.get(arch)
+    from repro.configs import SHAPES
+    shape = SHAPES[shape_name]
+
+    if cfg.family == "gnn":
+        # EGNN: messages/updates per edge/node; report 6*N*B_graphs as proxy
+        from repro.core import make_gfm_mtl
+        model = make_gfm_mtl(cfg, cfg.n_tasks)
+        shapes = jax.eval_shape(model.init, jax.ShapeDtypeStruct((2,), jnp.uint32))
+        n = sum(math.prod(x.shape) for x in jax.tree_util.tree_leaves(shapes))
+        return 6.0 * n * 128 * cfg.n_tasks, n
+
+    from repro.models.transformer import lm_init
+    shapes = jax.eval_shape(lambda k: lm_init(k, cfg),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    n_total = n_expert = 0
+    for path, leaf in flat:
+        ps = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        sz = math.prod(leaf.shape)
+        n_total += sz
+        if "ffn/w_" in ps and leaf.ndim >= 3 and cfg.n_experts:
+            n_expert += sz
+    active_frac = ((cfg.top_k / cfg.n_experts) if cfg.n_experts else 1.0)
+    n_active = n_total - n_expert + n_expert * active_frac
+
+    if shape.kind == "train":
+        D = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * D, n_active
+    if shape.kind == "prefill":
+        D = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * D, n_active
+    D = shape.global_batch  # decode: one token per sequence
+    return 2.0 * n_active * D, n_active
+
+
+def bottleneck_row(entry: dict) -> dict | None:
+    if entry.get("status") != "ok" or "hlo" not in entry:
+        return None
+    h = entry["hlo"]
+    ct = h["flops"] / PEAK_FLOPS_BF16
+    mt = h["traffic_bytes"] / HBM_BW
+    lt = h["collective_bytes"] / ICI_BW
+    dom = max(("compute", ct), ("memory", mt), ("collective", lt),
+              key=lambda kv: kv[1])
+    try:
+        mf, n_used = model_flops(entry["arch"], entry["shape"])
+        n_chips = CHIPS_POD * (2 if entry["mesh"] == "multipod" else 1)
+        ratio = mf / max(h["flops"] * n_chips, 1.0)
+    except Exception:
+        mf, ratio = float("nan"), float("nan")
+    return {
+        "arch": entry["arch"], "shape": entry["shape"], "mesh": entry["mesh"],
+        "compute_s": ct, "memory_s": mt, "collective_s": lt,
+        "dominant": dom[0], "model_flops": mf, "useful_ratio": ratio,
+        "temp_gb": entry.get("memory", {}).get("temp_size_in_bytes", 0) / 2 ** 30,
+        "kind": entry.get("kind"), "swa_variant": entry.get("swa_variant", False),
+    }
+
+
+def table(path="results/dryrun.json", mesh="pod") -> list[dict]:
+    with open(path) as f:
+        entries = json.load(f)
+    rows = []
+    for e in entries:
+        if e.get("mesh") != mesh:
+            continue
+        r = bottleneck_row(e)
+        if r:
+            rows.append(r)
+    return rows
+
+
+def lever(r) -> str:
+    """One sentence: what moves the dominant term down (per the brief)."""
+    arch, shape, dom = r["arch"], r["shape"], r["dominant"]
+    moe = arch.startswith(("granite", "deepseek"))
+    if dom == "collective":
+        if arch in ("granite-moe-3b-a800m", "internvl2-1b"):
+            return "head-aligned TP via 32x8 mesh reshape (done, §Perf-2)"
+        if shape == "train_4k":
+            return "reduce-scatter + bf16 gradient all-reduces"
+        return "keep 262k-vocab logits sharded (gather only the sampled row)"
+    if dom == "compute":
+        return "causal block skipping in the flash kernel"
+    # memory-dominant
+    if shape == "train_4k" and arch == "xlstm-125m":
+        return "chunkwise mLSTM (done, §Perf-1)"
+    if shape in ("train_4k", "prefill_32k"):
+        s = "Pallas flash attention keeps score blocks in VMEM"
+        if moe:
+            s += " + sorted expert dispatch"
+        return s
+    if shape == "decode_32k":
+        return "int8-quantised KV cache halves cache-read bytes"
+    return "latency-bound at B=1; batch concurrent long-context requests"
+
+
+def render_markdown(rows) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
+           "| useful ratio | temp GB | lever for dominant term |\n"
+           "|---|---|---|---|---|---|---|---|---|")
+    out = [hdr]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']}{' (swa)' if r['swa_variant'] else ''} "
+            f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} | **{r['dominant']}** "
+            f"| {r['useful_ratio']:.2f} | {r['temp_gb']:.1f} "
+            f"| {lever(r)} |")
+    return "\n".join(out)
+
+
+def main():
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "pod"
+    rows = table(mesh=mesh)
+    print(render_markdown(rows))
+    # per-table csv for benchmarks.run
+    print("\nname,us_per_call,derived")
+    for r in rows:
+        step = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        print(f"roofline/{r['arch']}/{r['shape']},{step * 1e6:.1f},"
+              f"dominant={r['dominant']};useful={r['useful_ratio']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Quickstart: the paper's two-level MTL GFM in ~60 lines.
+
+Builds the HydraGNN-style EGNN + per-source {energy, force} branches, trains
+on 3 synthetic multi-fidelity sources, and prints per-source MAEs — a
+miniature of the paper's Tables 1-2 protocol.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.core import MTPConfig, gfm_eval_fn, make_gfm_mtl, make_mtp_train_step
+from repro.data.loader import GroupBatcher
+from repro.data.synthetic_atoms import generate_all, to_batch_dict
+from repro.optim import adamw
+
+SOURCES = ["ani1x", "qm7x", "mptrj"]
+
+cfg = get_smoke("hydragnn-gfm")
+model = make_gfm_mtl(cfg, n_tasks=len(SOURCES))
+
+data = generate_all(256, max_atoms=cfg.max_atoms, max_edges=cfg.max_edges,
+                    sources=SOURCES)
+train = [dict(species=s.species[:192], pos=s.pos[:192],
+              edge_src=s.edge_src[:192], edge_dst=s.edge_dst[:192],
+              node_mask=s.node_mask[:192], edge_mask=s.edge_mask[:192],
+              energy=s.energy[:192], forces=s.forces[:192])
+         for s in data.values()]
+
+params = model.init(jax.random.PRNGKey(0))
+opt = adamw(3e-3)  # paper: AdamW (lr 1e-3 at full scale)
+state = opt.init(params)
+step = make_mtp_train_step(model, opt, MTPConfig(n_tasks=len(SOURCES)))
+batcher = GroupBatcher(train, batch_per_task=16)
+
+for i in range(200):
+    params, state, loss, metrics = step(params, state, batcher.next_batch())
+    if i % 25 == 0:
+        print(f"step {i:4d}  loss {float(loss):.4f}  "
+              f"per-task {np.round(np.asarray(metrics['per_task_loss']), 3)}")
+
+ev = gfm_eval_fn(cfg)
+print("\nheld-out per-source MAE (energy/atom, force):")
+for t, name in enumerate(SOURCES):
+    tb = to_batch_dict(data[name], np.arange(192, 256))
+    head_t = jax.tree_util.tree_map(lambda x: x[t], params["heads"])
+    e_mae, f_mae = ev(params["shared"], head_t, tb)
+    print(f"  {name:14s} E {float(e_mae):.4f}   F {float(f_mae):.4f}")

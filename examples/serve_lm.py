@@ -1,0 +1,42 @@
+"""Serving example: batched prefill + greedy decode on an assigned arch.
+
+Exercises the production serve path (prefill -> cache extension -> rolling /
+full decode) at smoke scale on CPU.
+
+  PYTHONPATH=src python examples/serve_lm.py --arch h2o-danube-1.8b --new 24
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke
+from repro.models import transformer
+from repro.train.serve import greedy_generate
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="h2o-danube-1.8b")
+ap.add_argument("--batch", type=int, default=4)
+ap.add_argument("--prompt-len", type=int, default=32)
+ap.add_argument("--new", type=int, default=16)
+args = ap.parse_args()
+
+cfg = get_smoke(args.arch)
+if not cfg.supports_decode:
+    raise SystemExit(f"{args.arch} has no decode path")
+params = transformer.lm_init(jax.random.PRNGKey(0), cfg)
+prompt = jax.random.randint(jax.random.PRNGKey(1),
+                            (args.batch, args.prompt_len), 0, cfg.vocab)
+memory = (jnp.zeros((args.batch, 32, cfg.d_model), cfg.compute_dtype)
+          if cfg.n_enc_layers else None)
+
+t0 = time.time()
+out = greedy_generate(params, cfg, prompt, args.new, memory=memory)
+dt = time.time() - t0
+print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} "
+      f"new={args.new}  wall={dt:.2f}s "
+      f"({args.batch * args.new / dt:.1f} tok/s on CPU)")
+print("sampled continuations (token ids):")
+for row in out[:2]:
+    print(" ", row.tolist())

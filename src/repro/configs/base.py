@@ -1,0 +1,129 @@
+"""Architecture + input-shape config dataclasses.
+
+Every assigned architecture is expressed as an ``ArchConfig``. Model builders
+(``repro.models.transformer`` / ``repro.models.gnn``) consume these; the
+launcher resolves them by id via ``repro.configs.registry``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    # identity ------------------------------------------------------------
+    name: str = ""
+    family: str = "dense"          # dense | moe | vlm | audio | hybrid | ssm | gnn
+    citation: str = ""             # source paper / model card
+    # trunk ---------------------------------------------------------------
+    n_layers: int = 0
+    d_model: int = 0
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    d_ff: int = 0
+    vocab: int = 0
+    head_dim: int = 0              # 0 => d_model // n_heads
+    qkv_bias: bool = False
+    act: str = "silu"
+    norm: str = "rmsnorm"          # rmsnorm | layernorm
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = True
+    # attention pattern ----------------------------------------------------
+    window: int = 0                # 0 = full attention; >0 = sliding window
+    # per-layer pattern unit, repeated to n_layers. entries:
+    #   "attn"        full attention
+    #   "swa"         sliding-window attention (cfg.window)
+    #   "mamba2"      Mamba2 SSD block
+    #   "mlstm"/"slstm" xLSTM blocks
+    #   "shared_attn" zamba-style shared-weight attention block (+LoRA/app)
+    block_pattern: tuple = ("attn",)
+    # MoE -------------------------------------------------------------------
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    d_ff_expert: int = 0           # per-expert hidden size
+    router_aux_coef: float = 0.01
+    capacity_factor: float = 1.25
+    # MLA (DeepSeek-V2) ------------------------------------------------------
+    kv_lora: int = 0               # latent rank for compressed KV (0 => GQA path)
+    q_lora: int = 0
+    rope_dims: int = 0             # per-head rotary sub-dim
+    v_head_dim: int = 0
+    # SSM -------------------------------------------------------------------
+    ssm_state: int = 0
+    ssm_heads: int = 0
+    ssm_expand: int = 2
+    ssm_chunk: int = 256
+    conv_kernel: int = 4
+    mlstm_chunked: bool = True     # chunkwise-parallel mLSTM (perf log: §Perf-1)
+    naive_tp: bool = False         # pre-§Perf-2 sharding (head-fractional TP)
+    moment_dtype: Any = jnp.float32  # AdamW m/v dtype (bf16: §Perf-3)
+    # encoder-decoder ---------------------------------------------------------
+    n_enc_layers: int = 0          # >0 => encoder-decoder (seamless)
+    enc_memory_len: int = 4096     # stub encoder-memory length for serving
+    # modality frontends (stubs) ----------------------------------------------
+    modality: str = "text"         # text | vision_embed | audio_embed
+    n_media_tokens: int = 0        # prepended embedding tokens for vlm/audio
+    # multi-task (the paper's technique) ----------------------------------------
+    n_tasks: int = 1               # >1 => per-source LM heads, task-shardable
+    # GNN (hydragnn-gfm) ----------------------------------------------------
+    gnn_hidden: int = 0
+    gnn_layers: int = 0
+    head_hidden: int = 0           # MTL head FC width (paper: 889)
+    head_layers: int = 3
+    max_atoms: int = 0
+    max_edges: int = 0
+    n_species: int = 0
+    # precision / memory ---------------------------------------------------
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    remat: bool = True
+    train_accum: int = 1           # gradient-accumulation microbatches
+    # sharding -------------------------------------------------------------
+    fsdp: bool = False             # ZeRO-3-style param sharding over "data"
+    # serving ----------------------------------------------------------------
+    supports_decode: bool = True
+    long_context_ok: bool = False  # native sub-quadratic path for long_500k
+    swa_variant_window: int = 0    # >0: brief-allowed SWA serve variant for long_500k
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // max(self.n_heads, 1))
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded to a multiple of 256 so the vocab dim shards evenly
+        over the model axis (odd vocabs otherwise force replicated fp32
+        logits — measured +39 GB/device on internvl2 train_4k)."""
+        if self.vocab == 0:
+            return 0
+        return -(-self.vocab // 256) * 256
+
+    @property
+    def pattern(self) -> tuple:
+        """Full per-layer pattern of length n_layers."""
+        unit = self.block_pattern
+        reps = -(-self.n_layers // len(unit))
+        return (unit * reps)[: self.n_layers]
+
+    def replace(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}

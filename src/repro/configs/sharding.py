@@ -1,0 +1,149 @@
+"""Parameter sharding rules: leaf path -> PartitionSpec.
+
+The mesh contract (launch/mesh.py): axes ("data", "model") single-pod or
+("pod", "data", "model") multi-pod. "model" carries tensor-parallel,
+expert-parallel and task-parallel dims; "data" carries batch + FSDP; "pod"
+is pure data-parallel.
+
+Rules are (substring-match on the '/'-joined tree path) -> spec builder.
+Stacked scan params carry a leading (reps,) dim which is auto-detected (rule
+spec is for the unstacked block) and padded with None.
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MODEL = "model"
+
+
+def _rules(cfg, model_size: int = 16):
+    F = "data" if cfg.fsdp else None  # FSDP axis
+    E_div = cfg.n_experts and cfg.n_experts % model_size == 0  # EP if divisible
+    # head-ALIGNED tensor parallelism only: sharding H*hd over the model axis
+    # when n_heads % model_size != 0 splits heads fractionally — XLA then
+    # all-reduces score tensors INSIDE the attention kv-loop (measured
+    # 1.3e13 B/dev on granite prefill_32k — §Perf-2). Same for kv heads.
+    QH = MODEL if cfg.n_heads and cfg.n_heads % model_size == 0 else None
+    KH = MODEL if cfg.n_kv_heads and cfg.n_kv_heads % model_size == 0 else None
+    if cfg.naive_tp:  # baseline (pre-§Perf-2) behaviour for the perf log
+        QH = KH = MODEL
+    r = []
+    # embeddings / heads
+    r.append((r"embed/table$", lambda s: P(MODEL, F)))
+    r.append((r"lm_head/w$", lambda s: P(F, MODEL)))
+    r.append((r"task_heads/w$", lambda s: P(MODEL, None, None)))
+    # attention (gqa + mla)
+    r.append((r"attn/wq/w$", lambda s: P(F, QH)))
+    r.append((r"attn/w[kv]/w$", lambda s: P(F, KH)))
+    r.append((r"attn/wq/b$", lambda s: P(QH)))
+    r.append((r"attn/w[kv]/b$", lambda s: P(KH)))
+    r.append((r"attn/wo/w$", lambda s: P(QH, F)))
+    r.append((r"attn/wq_a/w$", lambda s: P(F, None)))
+    r.append((r"attn/wq_b/w$", lambda s: P(None, MODEL)))
+    r.append((r"attn/wkv_a/w$", lambda s: P(F, None)))
+    r.append((r"attn/w[kv]_b/w$", lambda s: P(None, MODEL)))
+    # xattn (enc-dec) same as attn
+    r.append((r"xattn/wq/w$", lambda s: P(F, QH)))
+    r.append((r"xattn/w[kv]/w$", lambda s: P(F, KH)))
+    r.append((r"xattn/wo/w$", lambda s: P(QH, F)))
+    # dense mlp
+    r.append((r"ffn/w_gate/w$", lambda s: P(F, MODEL)))
+    r.append((r"ffn/w_up/w$", lambda s: P(F, MODEL)))
+    r.append((r"ffn/w_down/w$", lambda s: P(MODEL, F)))
+    # moe: expert-parallel if E divides the axis, else TP over expert hidden
+    if E_div:
+        r.append((r"ffn/w_gate$", lambda s: P(MODEL, F, None)))
+        r.append((r"ffn/w_up$", lambda s: P(MODEL, F, None)))
+        r.append((r"ffn/w_down$", lambda s: P(MODEL, None, F)))
+    else:
+        r.append((r"ffn/w_gate$", lambda s: P(None, F, MODEL)))
+        r.append((r"ffn/w_up$", lambda s: P(None, F, MODEL)))
+        r.append((r"ffn/w_down$", lambda s: P(None, MODEL, F)))
+    r.append((r"ffn/router$", lambda s: P(F, None)))
+    r.append((r"ffn/shared/w_gate/w$", lambda s: P(F, MODEL)))
+    r.append((r"ffn/shared/w_up/w$", lambda s: P(F, MODEL)))
+    r.append((r"ffn/shared/w_down/w$", lambda s: P(MODEL, F)))
+    # mamba2
+    r.append((r"mixer/w_in/w$", lambda s: P(F, MODEL)))
+    r.append((r"mixer/w_out/w$", lambda s: P(MODEL, F)))
+    r.append((r"mixer/conv_w$", lambda s: P(None, MODEL)))
+    r.append((r"mixer/conv_b$", lambda s: P(MODEL)))
+    # xlstm
+    r.append((r"mixer/w_up/w$", lambda s: P(F, MODEL)))
+    r.append((r"mixer/w[qkv]/w$", lambda s: P(F, MODEL)))
+    r.append((r"mixer/w_down/w$", lambda s: P(MODEL, F)))
+    r.append((r"mixer/w_ff_up/w$", lambda s: P(F, MODEL)))
+    r.append((r"mixer/w_ff_down/w$", lambda s: P(MODEL, F)))
+    return r
+
+
+def path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def make_spec_fn(cfg, mesh: Mesh | None = None):
+    axsize = dict(mesh.shape) if mesh is not None else {}
+    rules = _rules(cfg, model_size=axsize.get(MODEL, 16))
+
+    def _fit(spec: P, shape) -> P:
+        """Drop mesh axes from dims they don't evenly divide (e.g. odd
+        vocabs): jit in_shardings require even tiling."""
+        out = []
+        for dim, entry in zip(shape, spec):
+            if entry is None:
+                out.append(None)
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            n = 1
+            for a in axes:
+                n *= axsize.get(a, 1)
+            out.append(entry if n and dim % n == 0 else None)
+        return P(*out)
+
+    def spec_fn(path, leaf) -> P:
+        ps = path_str(path) if not isinstance(path, str) else path
+        for pat, build in rules:
+            if re.search(pat, ps):
+                spec = build(leaf.shape)
+                nd = leaf.ndim
+                k = len(spec)
+                if nd == k:
+                    return _fit(spec, leaf.shape)
+                if nd == k + 1:          # stacked scan block: leading reps dim
+                    return _fit(P(None, *spec), leaf.shape)
+                # mismatch (e.g. bias matched weight rule): replicate
+                return P(*([None] * nd))
+        return P(*([None] * leaf.ndim))
+
+    return spec_fn
+
+
+def tree_shardings(mesh: Mesh, tree, spec_fn):
+    """NamedSharding pytree for a params pytree / eval_shape tree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = [NamedSharding(mesh, spec_fn(p, l)) for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def check_divisibility(cfg, mesh: Mesh) -> list[str]:
+    """Sanity report: which sharded dims don't divide the axis (XLA pads
+    these — legal but wasteful; surfaced for the roofline notes)."""
+    issues = []
+    ax = dict(mesh.shape)
+    m = ax.get(MODEL, 1)
+    for nm, dim in (("n_heads", cfg.n_heads), ("vocab", cfg.vocab),
+                    ("d_ff", cfg.d_ff)):
+        if dim and dim % m:
+            issues.append(f"{nm}={dim} % model={m} != 0")
+    return issues

@@ -1,0 +1,117 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, zero allocation — consumed by
+``launch/dryrun.py`` (.lower() on specs) and by the smoke tests (which
+materialise real arrays from the same shapes at reduced scale).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.frontends import AUDIO_EMBED_DIM, VISION_EMBED_DIM
+from .base import ArchConfig, ShapeConfig
+
+
+def data_axes(mesh: Mesh | None) -> tuple:
+    if mesh is None:
+        return ()
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _sds(shape, dtype, mesh=None, spec=None):
+    if mesh is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec or P()))
+
+
+def _batch_spec(mesh, B, extra_dims):
+    """P over the batch dim if it divides the data axes; else replicate."""
+    if mesh is None:
+        return None
+    dp = data_axes(mesh)
+    n = 1
+    for a in dp:
+        n *= mesh.shape[a]
+    if B % n == 0 and B >= n:
+        return P(dp, *([None] * extra_dims))
+    return P(*([None] * (extra_dims + 1)))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh | None = None,
+                reduced: bool = False) -> dict:
+    """Batch pytree of ShapeDtypeStructs for the given (arch, shape).
+
+    train/prefill: {"tokens", "labels"?, "media"?, "src_embed"?}
+    decode:        {"token", "pos"}  (caches are built by the step factory)
+    """
+    B, S = shape.global_batch, shape.seq_len
+    if reduced:
+        B, S = min(B, 4), min(S, 128)
+    i32 = jnp.int32
+
+    if shape.kind == "decode":
+        return {
+            "token": _sds((B, 1), i32, mesh, _batch_spec(mesh, B, 1)),
+            "pos": _sds((), i32, mesh, P()),
+        }
+
+    out = {}
+    s_text = S
+    if cfg.modality == "vision_embed" and cfg.n_media_tokens:
+        nm = cfg.n_media_tokens if not reduced else 8
+        s_text = S - nm
+        out["media"] = _sds((B, nm, VISION_EMBED_DIM), jnp.float32, mesh,
+                            _batch_spec(mesh, B, 2))
+    if cfg.modality == "audio_embed":
+        M = cfg.enc_memory_len if not reduced else 32
+        out["src_embed"] = _sds((B, M, AUDIO_EMBED_DIM), jnp.float32, mesh,
+                                _batch_spec(mesh, B, 2))
+    out["tokens"] = _sds((B, s_text), i32, mesh, _batch_spec(mesh, B, 1))
+    if shape.kind == "train":
+        out["labels"] = _sds((B, s_text), i32, mesh, _batch_spec(mesh, B, 1))
+    return out
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh | None = None,
+                reduced: bool = False):
+    """ShapeDtypeStructs (sharded) for decode caches at full capacity."""
+    from repro.models.transformer import lm_cache_init
+    B = shape.global_batch if not reduced else min(shape.global_batch, 4)
+    C = shape.seq_len if not reduced else min(shape.seq_len, 128)
+    # SWA serve variant for pure full-attention archs on long_500k
+    eff_cfg = cfg
+    if shape.name == "long_500k" and not cfg.long_context_ok and cfg.swa_variant_window:
+        eff_cfg = cfg.replace(window=cfg.swa_variant_window,
+                              block_pattern=tuple(
+                                  "swa" if b == "attn" else b
+                                  for b in cfg.block_pattern))
+    shapes = jax.eval_shape(lambda: lm_cache_init(None, eff_cfg, B, C))
+    if mesh is None:
+        return shapes, eff_cfg
+
+    dp = data_axes(mesh)
+    n_dp = 1
+    for a in dp:
+        n_dp *= mesh.shape[a]
+    shard_batch = B % n_dp == 0 and B >= n_dp
+
+    def spec(leaf):
+        nd = leaf.ndim
+        # identify axes by rank pattern; leading (reps,) stack possible.
+        # attention caches: (B,C,K,hd) / (B,C,r); states: various.
+        s = [None] * nd
+        shp = leaf.shape
+        # find the batch axis: first axis equal to B (after optional reps dim)
+        bax = 0 if shp and shp[0] == B else (1 if nd > 1 and shp[1] == B else None)
+        if bax is not None and shard_batch:
+            s[bax] = dp
+        elif bax is not None and bax + 1 < nd and shp[bax + 1] >= n_dp and \
+                shp[bax + 1] % max(n_dp, 1) == 0 and shp[bax + 1] > 1024:
+            s[bax + 1] = dp  # long-context: shard cache length over data
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                    sharding=NamedSharding(mesh, P(*s)))
+
+    return jax.tree_util.tree_map(spec, shapes), eff_cfg

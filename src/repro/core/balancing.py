@@ -1,0 +1,70 @@
+"""Multi-source loss balancing + cross-fidelity energy alignment.
+
+The paper "consistently aligned the energy per atom values across all the
+datasets" (§4) before pre-training. Different DFT settings shift total
+energies by per-element offsets; the standard alignment (cf. Shiota et al.'s
+AEC) fits per-source reference atomic energies by least squares on element
+composition and subtracts them:
+
+    E_source(s) ≈ Σ_z n_z(s) · e_ref[source, z]  ->  E_aligned = E - Σ n_z e_ref
+
+Loss balancing offers static task weights and learnable homoscedastic
+uncertainty weights (Kendall et al.) for the energy/force pair.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def composition_matrix(species: np.ndarray, n_species: int) -> np.ndarray:
+    """species: (n_samples, A) int (0 = pad) -> (n_samples, n_species) counts."""
+    out = np.zeros((species.shape[0], n_species), np.float64)
+    for z in range(1, n_species):
+        out[:, z] = (species == z).sum(axis=1)
+    return out
+
+
+def fit_reference_energies(species: np.ndarray, total_energy: np.ndarray,
+                           n_species: int, ridge: float = 1e-6) -> np.ndarray:
+    """Least-squares per-element reference energies for ONE source.
+    total_energy: (n_samples,) TOTAL (not per-atom) energies."""
+    X = composition_matrix(species, n_species)
+    A = X.T @ X + ridge * np.eye(n_species)
+    b = X.T @ total_energy
+    return np.linalg.solve(A, b)
+
+
+def align_energies(species: np.ndarray, total_energy: np.ndarray,
+                   e_ref: np.ndarray) -> np.ndarray:
+    """Subtract composition-weighted reference energies -> aligned totals."""
+    X = composition_matrix(species, e_ref.shape[0]).astype(total_energy.dtype)
+    return total_energy - X @ e_ref
+
+
+def align_sources(per_source: list[dict], n_species: int) -> list[dict]:
+    """For each source {'species': (N,A), 'energy': (N,)} fit + subtract its
+    own reference energies; returns new dicts with aligned per-atom energy."""
+    out = []
+    for src in per_source:
+        e_ref = fit_reference_energies(src["species"], src["energy"], n_species)
+        aligned = align_energies(src["species"], src["energy"], e_ref)
+        n_atoms = np.maximum((src["species"] > 0).sum(axis=1), 1)
+        out.append(dict(src, energy=aligned / n_atoms, e_ref=e_ref))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Loss weighting
+# ---------------------------------------------------------------------------
+
+def uncertainty_weights_init(n_terms: int):
+    return {"log_sigma2": jnp.zeros((n_terms,), jnp.float32)}
+
+
+def uncertainty_weighted_loss(params, losses):
+    """Kendall homoscedastic-uncertainty MTL weighting:
+    Σ_i [ exp(-s_i)·L_i + s_i ] with s_i = log σ_i²."""
+    s = params["log_sigma2"]
+    return jnp.sum(jnp.exp(-s) * losses + s)

@@ -1,0 +1,207 @@
+"""Multi-task parallelism (the paper's contribution), in JAX SPMD.
+
+The paper (§4.3–4.4) distributes the per-dataset MTL decoding heads across
+process sub-groups: every process holds the shared trunk plus exactly ONE
+head; head gradients all-reduce only inside the head's sub-group (local DDP)
+while trunk gradients all-reduce globally. Memory per device falls from
+``P_s + N_h·P_h`` to ``P_s + P_h``.
+
+JAX mapping — the mesh's ``model`` axis doubles as the **task axis**:
+
+  * heads are stacked ``(n_tasks, …)`` arrays; dim 0 sharded over ``model``
+    (mode="par") or replicated (mode="base", the paper's MTL-base baseline);
+  * the batch is task-major ``(n_tasks, per_task_batch, …)``: dim 0 follows
+    the heads' sharding, dim 1 shards over the data axes;
+  * trunk params replicated (or FSDP/TP-sharded via ``shared_spec_fn``).
+
+With those shardings, XLA's SPMD partitioner emits exactly the paper's two
+collective scopes for the backward pass: a global all-reduce for trunk grads
+and a sub-group (data-axes-only) reduce for head grads. A ``shard_map``
+variant makes the two ``psum`` scopes explicit and is used to cross-validate
+the pjit path (tests/test_taskpar.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class MTPConfig:
+    n_tasks: int
+    mode: str = "par"              # "par" (task-sharded heads) | "base" (replicated)
+    task_axis: str = "model"
+    data_axes: tuple = ("data",)   # may include "pod"
+
+    @property
+    def all_axes(self) -> tuple:
+        return tuple(self.data_axes) + (self.task_axis,)
+
+
+class MultiTaskModel(NamedTuple):
+    """init -> {"shared": ..., "heads": stacked-leading-task-dim}.
+    loss_fn(shared, heads, batch) -> (per_task_loss: (n_tasks,), metrics)."""
+    init: Callable
+    loss_fn: Callable
+    name: str = "mtl"
+
+
+# ---------------------------------------------------------------------------
+# Sharding builders
+# ---------------------------------------------------------------------------
+
+def head_pspec(mtp: MTPConfig, leaf_ndim: int) -> P:
+    if mtp.mode == "par":
+        return P(mtp.task_axis, *([None] * (leaf_ndim - 1)))
+    return P(*([None] * leaf_ndim))
+
+
+def param_shardings(mesh: Mesh, params: Params, mtp: MTPConfig,
+                    shared_spec_fn: Callable | None = None):
+    """NamedSharding tree for {"shared", "heads"} params."""
+    def shared_spec(path, leaf):
+        if shared_spec_fn is not None:
+            return shared_spec_fn(path, leaf)
+        return P()
+
+    def build(tree, fn):
+        flat = jax.tree_util.tree_flatten_with_path(tree)
+        specs = [fn(p, l) for p, l in flat[0]]
+        return jax.tree_util.tree_unflatten(flat[1], [
+            NamedSharding(mesh, s) for s in specs])
+
+    out = {}
+    out["shared"] = build(params["shared"], shared_spec)
+    out["heads"] = build(params["heads"], lambda p, l: head_pspec(mtp, l.ndim))
+    return out
+
+
+def batch_shardings(mesh: Mesh, batch: Params, mtp: MTPConfig):
+    """Task-major batch (n_tasks, B, ...). par: tasks over task_axis, B over
+    data axes. base: tasks replicated, B over ALL axes (pure DDP)."""
+    def spec(leaf):
+        nd = leaf.ndim
+        if mtp.mode == "par":
+            s = P(mtp.task_axis, tuple(mtp.data_axes), *([None] * (nd - 2)))
+        else:
+            s = P(None, mtp.all_axes, *([None] * (nd - 2)))
+        return NamedSharding(mesh, s)
+
+    return jax.tree_util.tree_map(spec, batch)
+
+
+def memory_per_device(p_shared: int, p_head: int, n_heads: int, mode: str) -> int:
+    """Paper §4.3: parameter count resident per device."""
+    return p_shared + (p_head if mode == "par" else n_heads * p_head)
+
+
+# ---------------------------------------------------------------------------
+# pjit train step (sharding-spec formulation)
+# ---------------------------------------------------------------------------
+
+def make_mtp_train_step(model: MultiTaskModel, optimizer, mtp: MTPConfig,
+                        mesh: Mesh | None = None, shared_spec_fn=None,
+                        task_weights=None, donate: bool = True):
+    """Returns (step_fn, shard_fns). step(params, opt_state, batch) ->
+    (params, opt_state, loss, metrics). If mesh is None: single-device jit."""
+    tw = jnp.ones((mtp.n_tasks,), jnp.float32) if task_weights is None else \
+        jnp.asarray(task_weights, jnp.float32)
+    tw = tw / tw.sum()
+
+    def step(params, opt_state, batch):
+        def loss(p):
+            per_task, metrics = model.loss_fn(p["shared"], p["heads"], batch)
+            return jnp.sum(per_task * tw), (per_task, metrics)
+
+        (l, (per_task, metrics)), grads = jax.value_and_grad(loss, has_aux=True)(params)
+        new_params, new_state = optimizer.update(grads, opt_state, params)
+        metrics = dict(metrics, per_task_loss=per_task)
+        return new_params, new_state, l, metrics
+
+    if mesh is None:
+        return jax.jit(step, donate_argnums=(0, 1) if donate else ())
+
+    def jit_with_shardings(params, opt_state, batch):
+        ps = param_shardings(mesh, params, mtp, shared_spec_fn)
+        os_ = AdamLike_shardings(opt_state, ps)
+        bs = batch_shardings(mesh, batch, mtp)
+        return jax.jit(step,
+                       in_shardings=(ps, os_, bs),
+                       out_shardings=(ps, os_, NamedSharding(mesh, P()), None),
+                       donate_argnums=(0, 1) if donate else ())
+
+    return step, jit_with_shardings
+
+
+def AdamLike_shardings(opt_state, param_shardings_tree):
+    """Moments mirror the params; step is replicated."""
+    from repro.optim import AdamWState
+    mesh = jax.tree_util.tree_leaves(param_shardings_tree)[0].mesh
+    return AdamWState(step=NamedSharding(mesh, P()),
+                      m=param_shardings_tree, v=param_shardings_tree)
+
+
+# ---------------------------------------------------------------------------
+# shard_map explicit-collective formulation (paper-verbatim psum scopes)
+# ---------------------------------------------------------------------------
+
+def mtp_value_and_grad_shardmap(model: MultiTaskModel, mesh: Mesh,
+                                mtp: MTPConfig):
+    """Explicit two-scope gradient sync. Requires n_tasks == task-axis size.
+    Returns f(params, batch) -> (loss, grads) numerically identical to the
+    pjit path (head grads carry the 1/n_tasks factor of the mean-over-tasks
+    loss)."""
+    from jax.experimental.shard_map import shard_map
+
+    ax_t = mtp.task_axis
+    ax_d = tuple(mtp.data_axes)
+    n_t = mtp.n_tasks
+    assert mesh.shape[ax_t] == n_t, (
+        f"shard_map path needs n_tasks == mesh['{ax_t}'] "
+        f"({n_t} vs {mesh.shape[ax_t]})")
+
+    def local(shared, heads_local, batch_local):
+        # heads_local / batch_local have a leading task dim of size 1
+        def loss(sh, hd):
+            per_task, _ = model.loss_fn(sh, hd, batch_local)
+            return per_task[0]
+
+        l, (gs, gh) = jax.value_and_grad(loss, argnums=(0, 1))(
+            shared, heads_local)
+        # paper: trunk grads -> global group; head grads -> sub-group only.
+        # The global pmean includes the 1/n_tasks of the mean-over-tasks loss;
+        # head grads live in a single sub-group, so they carry it explicitly.
+        gs = jax.lax.pmean(gs, ax_d + (ax_t,))
+        gh = jax.lax.pmean(gh, ax_d)
+        gh = jax.tree_util.tree_map(lambda g: g / n_t, gh)
+        l = jax.lax.pmean(l, ax_d + (ax_t,))
+        return l, gs, gh
+
+    def shead(leaf_ndim):
+        return P(ax_t, *([None] * (leaf_ndim - 1)))
+
+    def f(params, batch):
+        shared, heads = params["shared"], params["heads"]
+        in_specs = (
+            jax.tree_util.tree_map(lambda l: P(), shared),
+            jax.tree_util.tree_map(lambda l: shead(l.ndim), heads),
+            jax.tree_util.tree_map(
+                lambda l: P(ax_t, ax_d, *([None] * (l.ndim - 2))), batch),
+        )
+        out_specs = (
+            P(),
+            jax.tree_util.tree_map(lambda l: P(), shared),
+            jax.tree_util.tree_map(lambda l: shead(l.ndim), heads),
+        )
+        fn = shard_map(local, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_rep=False)
+        l, gs, gh = fn(shared, heads, batch)
+        return l, {"shared": gs, "heads": gh}
+
+    return f

@@ -1,0 +1,2 @@
+from . import lm_data, loader, synthetic_atoms  # noqa: F401
+from .loader import GroupBatcher  # noqa: F401

@@ -1,0 +1,149 @@
+"""Sharded sample store — the ADIOS + DDStore analogue.
+
+The paper serialises every dataset into ADIOS bp files and serves training
+batches through DDStore, an in-memory distributed cache with one-sided
+remote fetches so "a process requests the next batch ... which transparently
+obtains it from the memory of a remote process", never touching the
+filesystem in the steady state.
+
+This module reproduces that data path at container scale:
+
+  * ``write_store``  — serialise one source into N ``.npz`` shards + a JSON
+    manifest (the ADIOS file-set analogue);
+  * ``ShardedSource`` — lazily maps shards, caches them in memory after
+    first touch (the DDStore cache), and serves arbitrary sample indices by
+    routing to the owning shard — reads from the "remote" shard hit the
+    in-memory copy, not the filesystem;
+  * ``PrefetchingBatcher`` — a GroupBatcher over ShardedSources with a
+    one-batch-deep background prefetch thread (double buffering, DDStore's
+    latency-hiding role).
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import threading
+
+import numpy as np
+
+
+def write_store(path: str, arrays: dict[str, np.ndarray], *,
+                shard_size: int = 256) -> dict:
+    """arrays: dict of equal-length (dim 0) numpy arrays -> shard files +
+    manifest. Returns the manifest."""
+    os.makedirs(path, exist_ok=True)
+    n = len(next(iter(arrays.values())))
+    for k, v in arrays.items():
+        assert len(v) == n, f"{k} length {len(v)} != {n}"
+    shards = []
+    for i, start in enumerate(range(0, n, shard_size)):
+        stop = min(start + shard_size, n)
+        fname = f"shard_{i:05d}.npz"
+        np.savez(os.path.join(path, fname),
+                 **{k: v[start:stop] for k, v in arrays.items()})
+        shards.append({"file": fname, "start": start, "stop": stop})
+    manifest = {"n_samples": n, "keys": sorted(arrays),
+                "shard_size": shard_size, "shards": shards}
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+class ShardedSource:
+    """Lazy, caching reader over one store directory (DDStore cache)."""
+
+    def __init__(self, path: str):
+        self.path = path
+        with open(os.path.join(path, "manifest.json")) as f:
+            self.manifest = json.load(f)
+        self._cache: dict[int, dict] = {}
+        self.fetches = 0          # filesystem reads (should plateau)
+        self.hits = 0             # in-memory serves
+
+    def __len__(self):
+        return self.manifest["n_samples"]
+
+    @property
+    def keys(self):
+        return self.manifest["keys"]
+
+    def _shard(self, si: int) -> dict:
+        if si not in self._cache:
+            f = np.load(os.path.join(self.path,
+                                     self.manifest["shards"][si]["file"]))
+            self._cache[si] = {k: f[k] for k in self.keys}
+            self.fetches += 1
+        else:
+            self.hits += 1
+        return self._cache[si]
+
+    def gather(self, idx: np.ndarray) -> dict:
+        """Serve arbitrary sample indices, routing per owning shard."""
+        ss = self.manifest["shard_size"]
+        out = {k: [] for k in self.keys}
+        order = np.argsort(idx // ss, kind="stable")
+        inv = np.empty_like(order)
+        inv[order] = np.arange(len(order))
+        for si in np.unique(idx // ss):
+            sh = self._shard(int(si))
+            local = idx[idx // ss == si] - si * ss
+            for k in self.keys:
+                out[k].append(sh[k][local])
+        res = {k: np.concatenate(v)[inv] for k, v in out.items()}
+        return res
+
+
+class PrefetchingBatcher:
+    """Group-aware batcher over ShardedSources with background prefetch.
+
+    Matches GroupBatcher's contract: ``next_batch()`` -> task-major numpy
+    dict, row t drawn only from source t."""
+
+    def __init__(self, sources: list[ShardedSource], batch_per_task: int,
+                 *, seed: int = 0, depth: int = 1):
+        self.sources = sources
+        self.B = batch_per_task
+        self.rngs = [np.random.default_rng(seed + i)
+                     for i in range(len(sources))]
+        self.perm = [r.permutation(len(s)) for r, s in zip(self.rngs, sources)]
+        self.cursor = [0] * len(sources)
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._producer, daemon=True)
+        self._thread.start()
+
+    def _take(self, t: int) -> np.ndarray:
+        n = len(self.perm[t])
+        idx, c = [], self.cursor[t]
+        while len(idx) < self.B:
+            take = min(self.B - len(idx), n - c)
+            idx.extend(self.perm[t][c: c + take])
+            c += take
+            if c >= n:
+                self.perm[t] = self.rngs[t].permutation(n)
+                c = 0
+        self.cursor[t] = c
+        return np.asarray(idx)
+
+    def _assemble(self) -> dict:
+        rows = [s.gather(self._take(t)) for t, s in enumerate(self.sources)]
+        return {k: np.stack([r[k] for r in rows]) for k in rows[0]}
+
+    def _producer(self):
+        while not self._stop.is_set():
+            try:
+                self._q.put(self._assemble(), timeout=0.5)
+            except queue.Full:
+                continue
+
+    def next_batch(self) -> dict:
+        return self._q.get()
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass

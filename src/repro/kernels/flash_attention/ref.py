@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, q_pos, k_pos, *, causal=True, window=0, scale=None):
+    """q: (B,H,Sq,D); k,v: (B,K,Sk,D). Full-softmax reference in f32."""
+    B, H, Sq, D = q.shape
+    K = k.shape[1]
+    G = H // K
+    scale = scale if scale is not None else D ** -0.5
+    kk = jnp.repeat(k, G, axis=1)
+    vv = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * scale
+    dpos = q_pos[:, None] - k_pos[None, :]
+    mask = k_pos[None, :] > -(10 ** 8)
+    if causal:
+        mask &= dpos >= 0
+    if window > 0:
+        mask &= dpos < window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32))
+    return o.astype(q.dtype)

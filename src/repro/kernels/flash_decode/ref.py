@@ -1,0 +1,26 @@
+"""Oracle: naive decode attention over the full cache."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_ref(q, k, v, *, q_pos, k_pos, window=0, scale=None):
+    """q: (B,1,H,D); k,v: (B,S,K,D); k_pos: (B,S). -> (B,1,H,D)."""
+    B, _, H, D = q.shape
+    S, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = scale if scale is not None else D ** -0.5
+    qg = q[:, 0].reshape(B, K, G, D).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k.astype(jnp.float32)) * scale
+    q_pos = jnp.broadcast_to(jnp.asarray(q_pos).reshape(-1), (B,))
+    dpos = q_pos[:, None] - k_pos
+    mask = (k_pos > -(10 ** 8)) & (dpos >= 0)
+    if window > 0:
+        mask &= dpos < window
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, 1, H, D).astype(q.dtype)

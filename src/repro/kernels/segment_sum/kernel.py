@@ -1,0 +1,74 @@
+"""Segment-sum Pallas TPU kernel — the MPNN aggregation hot spot.
+
+GPU frameworks implement scatter-add with atomics; TPU has none, so the
+operation is re-thought for the MXU (the DESIGN.md "adapt, don't port" item):
+tile (edges x nodes), build the one-hot membership tile in VMEM from the
+destination-index block, and accumulate ``one_hotᵀ @ messages`` as a matmul.
+
+Grid: (num_node_blocks, num_edge_blocks) — edge blocks are the sequential
+inner dim; a VMEM f32 scratch accumulates the (BN, F) node tile and is
+flushed on the last edge block.
+
+VMEM budget at BN=128, BE=256, F=896: membership tile (256x128 f32) 128 KiB,
+message tile (256x896 f32) 896 KiB, accumulator (128x896 f32) 448 KiB —
+≈1.5 MiB resident.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ss_kernel(dst_ref, msg_ref, o_ref, acc_ref, *, bn, ne):
+    ib = pl.program_id(0)   # node block
+    je = pl.program_id(1)   # edge block (sequential)
+
+    @pl.when(je == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    dst = dst_ref[...]                                   # (BE,) int32
+    msg = msg_ref[...].astype(jnp.float32)               # (BE, F)
+    node_ids = ib * bn + jax.lax.broadcasted_iota(jnp.int32, (dst.shape[0], bn), 1)
+    onehot = (dst[:, None] == node_ids).astype(jnp.float32)   # (BE, BN)
+    acc_ref[...] += jax.lax.dot_general(onehot, msg, (((0,), (0,)), ((), ())))
+
+    @pl.when(je == ne - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n_nodes", "block_n", "block_e",
+                                             "interpret"))
+def segment_sum_2d(messages, dst, n_nodes: int, *, block_n=128, block_e=256,
+                   interpret=True):
+    """messages: (E, F); dst: (E,) int32 in [0, n_nodes) or >= n_nodes for
+    masked/pad edges. Returns (n_nodes, F)."""
+    E, F = messages.shape
+    bn = min(block_n, n_nodes)
+    be = min(block_e, E)
+    nb, ne = -(-n_nodes // bn), -(-E // be)
+    if ne * be != E:
+        pe = ne * be - E
+        messages = jnp.pad(messages, ((0, pe), (0, 0)))
+        dst = jnp.pad(dst, (0, pe), constant_values=nb * bn + 1)
+    dst = dst.astype(jnp.int32)
+
+    kern = functools.partial(_ss_kernel, bn=bn, ne=ne)
+    out = pl.pallas_call(
+        kern,
+        grid=(nb, ne),
+        in_specs=[
+            pl.BlockSpec((be,), lambda ib, je: (je,)),
+            pl.BlockSpec((be, F), lambda ib, je: (je, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, F), lambda ib, je: (ib, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb * bn, F), messages.dtype),
+        scratch_shapes=[pltpu.VMEM((bn, F), jnp.float32)],
+        interpret=interpret,
+    )(dst, messages)
+    return out[:n_nodes]

@@ -1,0 +1,18 @@
+"""jit'd public wrapper for batched graph segment-sum."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import segment_sum_2d
+
+
+def segment_sum(messages, dst, n_nodes: int, *, edge_mask=None,
+                block_n=128, block_e=256, interpret=True):
+    """messages: (B,E,F); dst: (B,E) -> (B,n_nodes,F). Masked edges are
+    routed to an out-of-range sentinel so they contribute nothing."""
+    if edge_mask is not None:
+        dst = jnp.where(edge_mask, dst, n_nodes + 1)
+    fn = lambda m, d: segment_sum_2d(m, d, n_nodes, block_n=block_n,
+                                     block_e=block_e, interpret=interpret)
+    return jax.vmap(fn)(messages, dst)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for segment_sum (jax.ops.segment_sum)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum_ref(messages, dst, n_nodes: int):
+    """messages: (E,F); dst: (E,); out-of-range dst are dropped."""
+    valid = dst < n_nodes
+    m = jnp.where(valid[:, None], messages, 0.0)
+    d = jnp.where(valid, dst, 0)
+    out = jax.ops.segment_sum(m.astype(jnp.float32), d, num_segments=n_nodes)
+    # drop contributions routed to node 0 from invalid edges
+    corr = jax.ops.segment_sum(
+        jnp.where(valid[:, None], 0.0, 0.0).astype(jnp.float32), d,
+        num_segments=n_nodes)
+    return (out - corr).astype(messages.dtype)

@@ -1,0 +1,304 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh).
+
+Proves the distribution config is coherent without hardware: builds the
+production mesh from 512 placeholder host devices, lowers the real step
+function against ShapeDtypeStruct stand-ins (zero allocation — params and
+optimizer state come from jax.eval_shape), compiles, and records
+memory_analysis / cost_analysis / collective schedule for §Dry-run and
+§Roofline.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-0.5b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+"""
+import argparse
+import json
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs import SHAPES
+from repro.configs.sharding import make_spec_fn, tree_shardings
+from repro.configs.specs import cache_specs, data_axes, input_specs
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.hlo_stats import collective_stats, op_histogram
+from repro.launch.mesh import make_gfm_paper_mesh, make_production_mesh
+from repro.optim import adamw
+from repro.train.loop import make_lm_train_step
+from repro.train.serve import make_decode_step
+
+
+def _sds_with_shardings(shapes_tree, shardings_tree):
+    return jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes_tree, shardings_tree)
+
+
+def skip_reason(arch: str, shape_name: str) -> str | None:
+    cfg = configs.get(arch)
+    shape = SHAPES[shape_name]
+    if cfg.family == "gnn" and shape.kind != "train":
+        return "gnn: no LM serving shapes (paper arch trains only)"
+    if shape.kind == "decode" and not cfg.supports_decode:
+        return "no decode step for this arch"
+    if shape_name == "long_500k":
+        if arch == "seamless-m4t-medium":
+            return "enc-dec speech model: 500k-token decode out of family scope (DESIGN.md)"
+        if not cfg.long_context_ok and not cfg.swa_variant_window:
+            return "pure full attention, no SWA variant configured"
+    return None
+
+
+def params_and_opt_specs(cfg, mesh, init_fn, moment_dtype=jnp.float32):
+    """eval_shape the init + optimizer and attach rule-based shardings."""
+    key_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    p_shapes = jax.eval_shape(init_fn, key_spec)
+    spec_fn = make_spec_fn(cfg, mesh)
+    p_shard = tree_shardings(mesh, p_shapes, spec_fn)
+    p_sds = _sds_with_shardings(p_shapes, p_shard)
+    opt = adamw(1e-3, weight_decay=0.01, grad_clip=1.0,
+                moment_dtype=moment_dtype)
+    o_shapes = jax.eval_shape(opt.init, p_shapes)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.optim import AdamWState
+    o_shard = AdamWState(step=NamedSharding(mesh, P()), m=p_shard, v=p_shard)
+    o_sds = _sds_with_shardings(o_shapes, o_shard)
+    return p_sds, o_sds, opt
+
+
+def build_lowered(arch: str, shape_name: str, mesh, impl="chunked",
+                  accum: int = 1, cfg_override=None):
+    """Returns (lowered, meta). Raises on structural failure."""
+    cfg = cfg_override or configs.get(arch)
+    shape = SHAPES[shape_name]
+
+    if cfg.family == "gnn":
+        return _build_gfm_lowered(cfg, mesh)
+
+    if shape.kind == "train":
+        from repro.models.transformer import lm_init
+        p_sds, o_sds, opt = params_and_opt_specs(
+            cfg, mesh, lambda k: lm_init(k, cfg),
+            moment_dtype=cfg.moment_dtype)
+        batch = input_specs(cfg, shape, mesh)
+        if accum == 1:
+            accum = cfg.train_accum
+        step = make_lm_train_step(cfg, opt, impl=impl, accum=accum)
+        lowered = jax.jit(step, donate_argnums=(0, 1)).lower(p_sds, o_sds, batch)
+        return lowered, {"kind": "train", "accum": accum}
+
+    if shape.kind == "prefill":
+        from repro.models import transformer
+        from repro.models.transformer import lm_init
+        p_sds, _, _ = params_and_opt_specs(cfg, mesh, lambda k: lm_init(k, cfg))
+        batch = input_specs(cfg, shape, mesh)
+
+        def prefill(params, batch):
+            memory = None
+            if cfg.n_enc_layers:
+                memory = transformer.encode(params, batch["src_embed"], cfg, impl)
+            logits, caches, _ = transformer.lm_apply(
+                params, batch["tokens"], cfg=cfg, media=batch.get("media"),
+                memory=memory, mode="prefill", impl=impl)
+            return logits[:, -1:], caches
+
+        lowered = jax.jit(prefill).lower(p_sds, batch)
+        return lowered, {"kind": "prefill"}
+
+    # decode
+    caches_sds, eff_cfg = cache_specs(cfg, shape, mesh)
+    from repro.models.transformer import lm_init
+    p_sds, _, _ = params_and_opt_specs(eff_cfg, mesh,
+                                       lambda k: lm_init(k, eff_cfg))
+    io = input_specs(eff_cfg, shape, mesh)
+    dec = make_decode_step(eff_cfg, impl=impl)
+    mem_sds = None
+    if cfg.n_enc_layers:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        mem_sds = jax.ShapeDtypeStruct(
+            (shape.global_batch, cfg.enc_memory_len, cfg.d_model),
+            cfg.compute_dtype, sharding=NamedSharding(mesh, P()))
+
+    def decode(params, token, caches, pos, memory=None):
+        return dec(params, token, caches, pos, memory=memory)
+
+    lowered = jax.jit(decode).lower(p_sds, io["token"], caches_sds, io["pos"],
+                                    mem_sds)
+    return lowered, {"kind": "decode",
+                     "swa_variant": eff_cfg is not cfg and bool(cfg.swa_variant_window)}
+
+
+def _build_gfm_lowered(cfg, mesh):
+    """The paper's model: MTP x DDP train step on the task mesh."""
+    from repro.core import MTPConfig, make_mtp_train_step, param_shardings, \
+        batch_shardings, make_gfm_mtl
+    from repro.core.taskpar import AdamLike_shardings
+    model = make_gfm_mtl(cfg, cfg.n_tasks)
+    # task-sharded heads need n_tasks to divide the task axis; otherwise run
+    # the paper's MTL-base mode (heads replicated, pure DDP)
+    mode = "par" if mesh.shape["model"] % cfg.n_tasks == 0 else "base"
+    mtp = MTPConfig(n_tasks=cfg.n_tasks, mode=mode,
+                    data_axes=data_axes(mesh))
+    opt = adamw(1e-3)
+    key_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    p_shapes = jax.eval_shape(model.init, key_spec)
+    p_shard = param_shardings(mesh, p_shapes, mtp)
+    p_sds = _sds_with_shardings(p_shapes, p_shard)
+    o_shapes = jax.eval_shape(opt.init, p_shapes)
+    o_sds = _sds_with_shardings(o_shapes, AdamLike_shardings(o_shapes, p_shard))
+
+    # paper: local batch 128 per process; the per-task global batch must
+    # divide the axes its dim is sharded over ("data" in par mode, all axes
+    # in base mode; the paper mesh has data=100)
+    n_req = 1
+    for a in (data_axes(mesh) if mode == "par" else
+              data_axes(mesh) + ("model",)):
+        n_req *= mesh.shape[a]
+    B = 128 if 128 % n_req == 0 else n_req
+    T, A, E = cfg.n_tasks, cfg.max_atoms, cfg.max_edges
+    batch_shapes = {
+        "species": jax.ShapeDtypeStruct((T, B, A), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((T, B, A, 3), jnp.float32),
+        "edge_src": jax.ShapeDtypeStruct((T, B, E), jnp.int32),
+        "edge_dst": jax.ShapeDtypeStruct((T, B, E), jnp.int32),
+        "node_mask": jax.ShapeDtypeStruct((T, B, A), jnp.bool_),
+        "edge_mask": jax.ShapeDtypeStruct((T, B, E), jnp.bool_),
+        "energy": jax.ShapeDtypeStruct((T, B), jnp.float32),
+        "forces": jax.ShapeDtypeStruct((T, B, A, 3), jnp.float32),
+    }
+    b_shard = batch_shardings(mesh, batch_shapes, mtp)
+    b_sds = _sds_with_shardings(batch_shapes, b_shard)
+
+    step = make_mtp_train_step(model, opt, mtp)  # plain step; jit below
+    lowered = jax.jit(step, donate_argnums=(0, 1)).lower(p_sds, o_sds, b_sds)
+    return lowered, {"kind": "gfm-train", "n_tasks": cfg.n_tasks,
+                     "mtp_mode": mode}
+
+
+def analyze(lowered, compile_too=True) -> dict:
+    res = {}
+    t0 = time.time()
+    res["lower_s"] = None
+    hlo = None
+    if compile_too:
+        compiled = lowered.compile()
+        res["compile_s"] = round(time.time() - t0, 2)
+        try:
+            ma = compiled.memory_analysis()
+            res["memory"] = {
+                k: int(getattr(ma, k))
+                for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "generated_code_size_in_bytes")
+                if hasattr(ma, k)}
+        except Exception as e:  # pragma: no cover
+            res["memory"] = {"error": str(e)}
+        try:
+            ca = compiled.cost_analysis()
+            ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+            res["cost"] = {k: float(v) for k, v in ca.items()
+                           if k in ("flops", "bytes accessed", "transcendentals",
+                                    "utilization operand 0 {}")
+                           or k.startswith("bytes accessed")}
+        except Exception as e:  # pragma: no cover
+            res["cost"] = {"error": str(e)}
+        hlo = compiled.as_text()
+    else:
+        hlo = lowered.as_text()
+    # loop-aware per-device stats (XLA cost_analysis counts while bodies once)
+    res["hlo"] = analyze_hlo(hlo)
+    res["collectives_once"] = collective_stats(hlo)
+    res["top_ops"] = op_histogram(hlo, 12)
+    return res
+
+
+def run_one(arch: str, shape_name: str, mesh_kind: str, *, impl="chunked",
+            accum: int = 1, compile_too=True, cfg_override=None,
+            baseline=False) -> dict:
+    entry = {"arch": arch, "shape": shape_name, "mesh": mesh_kind}
+    if baseline and cfg_override is None and arch in configs.ARCHS:
+        cfg_override = configs.get(arch).replace(mlstm_chunked=False,
+                                                 naive_tp=True)
+    reason = skip_reason(arch, shape_name)
+    if reason:
+        entry["status"] = "skip"
+        entry["reason"] = reason
+        return entry
+    if mesh_kind == "paper":
+        mesh = make_gfm_paper_mesh()
+    elif mesh_kind.startswith("pod32x8"):
+        from repro.launch.mesh import make_alt_mesh
+        mesh = make_alt_mesh(8)
+    else:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    t0 = time.time()
+    try:
+        lowered, meta = build_lowered(arch, shape_name, mesh, impl=impl,
+                                      accum=accum, cfg_override=cfg_override)
+        entry.update(meta)
+        entry.update(analyze(lowered, compile_too=compile_too))
+        entry["status"] = "ok"
+    except Exception as e:
+        entry["status"] = "fail"
+        entry["error"] = f"{type(e).__name__}: {e}"
+        entry["trace"] = traceback.format_exc()[-2000:]
+    entry["total_s"] = round(time.time() - t0, 2)
+    return entry
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="pod",
+                    choices=["pod", "multipod", "both", "paper", "pod32x8"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--baseline", action="store_true",
+                    help="pre-perf-iteration system (naive TP, scan mLSTM)")
+    ap.add_argument("--no-compile", action="store_true")
+    ap.add_argument("--out", default=None, help="JSON output path (appends)")
+    args = ap.parse_args()
+
+    archs = list(configs.ASSIGNED) if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+
+    results = []
+    if args.out and os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in results
+            if r.get("status") == "ok"}
+
+    for arch in archs:
+        for shape in shapes:
+            for mk in meshes:
+                if (arch, shape, mk) in done:
+                    continue
+                r = run_one(arch, shape, mk, accum=args.accum,
+                            compile_too=not args.no_compile,
+                            baseline=args.baseline)
+                print(json.dumps({k: v for k, v in r.items()
+                                  if k not in ("trace", "top_ops")}))
+                results.append(r)
+                if args.out:
+                    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+                    with open(args.out, "w") as f:
+                        json.dump(results, f, indent=1)
+
+    n_ok = sum(1 for r in results if r["status"] == "ok")
+    n_fail = sum(1 for r in results if r["status"] == "fail")
+    n_skip = sum(1 for r in results if r["status"] == "skip")
+    print(f"# dryrun done: ok={n_ok} fail={n_fail} skip={n_skip}")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Parse lowered/compiled HLO text for collective statistics.
+
+cost_analysis() has no collective_bytes, so we sum the output-shape bytes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute in the (post-SPMD, per-device) module text.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[8,128]{1,0}' or '(f32[2], f32[4])' -> total bytes."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """-> {op_kind: {"count": int, "bytes": int}} + {"total_bytes": int}.
+    Bytes are OUTPUT bytes of each collective in the per-device program."""
+    out: dict = defaultdict(lambda: {"count": 0, "bytes": 0})
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\]{},]+)\s+([\w-]+)",
+                     ls)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        for kind in _COLLECTIVES:
+            if op == kind or op.startswith(kind + "-"):
+                if op.endswith("-start"):   # avoid double count with -done
+                    continue
+                out[kind]["count"] += 1
+                out[kind]["bytes"] += _shape_bytes(shape_str)
+                break
+    total = sum(v["bytes"] for v in out.values())
+    res = dict(out)
+    res["total_bytes"] = total
+    return res
+
+
+def op_histogram(hlo_text: str, top: int = 15) -> list[tuple[str, int]]:
+    counts: dict = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = re.match(r"\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(?:\([^)]*\)|[\w\[\]{},]+)\s+([\w-]+)",
+                     line)
+        if m:
+            counts[m.group(1)] += 1
+    return sorted(counts.items(), key=lambda kv: -kv[1])[:top]

@@ -1,0 +1,1 @@
+from . import attention, common, frontends, gnn, heads, mlp, moe, ssm, transformer  # noqa: F401

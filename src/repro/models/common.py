@@ -1,0 +1,186 @@
+"""Common building blocks: norms, RoPE, initializers, dtype policy.
+
+Everything is a pure function over pytree parameter dicts — no flax/haiku in
+the container, and plain pytrees keep the sharding story explicit (the
+config layer attaches a PartitionSpec to every leaf by name).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Params = dict  # nested {str: Params | jnp.ndarray}
+
+
+@dataclasses.dataclass(frozen=True)
+class Precision:
+    """Dtype policy. TPU-native default: fp32 params, bf16 compute."""
+
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    # dtype used for softmax / variance / loss reductions
+    accum_dtype: Any = jnp.float32
+
+
+DEFAULT_PRECISION = Precision()
+
+
+def cast(x, dtype):
+    return x.astype(dtype) if x.dtype != dtype else x
+
+
+# ---------------------------------------------------------------------------
+# Initializers (pure functions of a key; match common LLM init conventions)
+# ---------------------------------------------------------------------------
+
+def normal_init(key, shape, dtype, stddev=0.02):
+    return (stddev * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def lecun_init(key, shape, dtype, fan_in=None):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    return (jax.random.normal(key, shape, jnp.float32) / math.sqrt(max(fan_in, 1))).astype(dtype)
+
+
+def zeros_init(_key, shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(_key, shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+class KeyGen:
+    """Split a PRNG key on demand: kg = KeyGen(key); w = init(kg(), ...)."""
+
+    def __init__(self, key):
+        self._key = key
+
+    def __call__(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params: Params, x: jnp.ndarray, eps: float = 1e-6,
+            upcast: bool = True) -> jnp.ndarray:
+    dt = x.dtype
+    if upcast:
+        x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(y.dtype)).astype(dt)
+
+
+def layernorm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"] + params["bias"]).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    """Inverse frequencies, shape (head_dim//2,)."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., :, None, :]  # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense layers as param dicts
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype, bias: bool = False,
+               stddev: float | None = None) -> Params:
+    std = stddev if stddev is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": normal_init(key, (d_in, d_out), dtype, std)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(params: Params, x: jnp.ndarray, compute_dtype=None) -> jnp.ndarray:
+    w = params["w"]
+    if compute_dtype is not None:
+        x = cast(x, compute_dtype)
+        w = cast(w, compute_dtype)
+    y = x @ w
+    if "b" in params:
+        y = y + cast(params["b"], y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+# ---------------------------------------------------------------------------
+
+def embedding_init(key, vocab: int, d: int, dtype) -> Params:
+    return {"table": normal_init(key, (vocab, d), dtype, 0.02)}
+
+
+def embed(params: Params, ids: jnp.ndarray, compute_dtype=None) -> jnp.ndarray:
+    t = params["table"]
+    if compute_dtype is not None:
+        t = cast(t, compute_dtype)
+    return jnp.take(t, ids, axis=0)
+
+
+def unembed(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """Tied unembedding: x @ table.T in fp32 accumulation."""
+    t = params["table"].astype(x.dtype)
+    return jnp.einsum("...d,vd->...v", x, t, preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Misc
+# ---------------------------------------------------------------------------
+
+def count_params(params: Params) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+
+
+def tree_bytes(params: Params) -> int:
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree_util.tree_leaves(params))
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def silu(x):
+    return jax.nn.silu(x)
+
+
+ACT: dict[str, Callable] = {"gelu": gelu, "silu": silu, "relu": jax.nn.relu,
+                            "tanh": jnp.tanh}

@@ -1,0 +1,35 @@
+"""Modality frontends — STUBS per the brief.
+
+The ViT / conv-codec themselves are out of scope: ``input_specs()`` supplies
+precomputed patch/frame embeddings. What we *do* own is the learned projector
+that maps those embeddings into the LM's d_model space (the standard
+VLM/audio "adapter" layer), so the backbone consumes real parameters.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .common import KeyGen, Params, dense, dense_init, layernorm, layernorm_init
+
+# embedding widths the stubs emit (typical ViT-L / w2v-BERT frame widths)
+VISION_EMBED_DIM = 1024
+AUDIO_EMBED_DIM = 1024
+
+
+def projector_init(key, cfg) -> Params:
+    kg = KeyGen(key)
+    d_in = VISION_EMBED_DIM if cfg.modality == "vision_embed" else AUDIO_EMBED_DIM
+    return {
+        "ln": layernorm_init(d_in, cfg.param_dtype),
+        "fc1": dense_init(kg(), d_in, cfg.d_model, cfg.param_dtype, bias=True),
+        "fc2": dense_init(kg(), cfg.d_model, cfg.d_model, cfg.param_dtype, bias=True),
+    }
+
+
+def projector_apply(params: Params, media_embed, cfg):
+    """media_embed: (B, n_media, d_in) -> (B, n_media, d_model)."""
+    cd = cfg.compute_dtype
+    x = layernorm(params["ln"], media_embed.astype(cd))
+    x = dense(params["fc1"], x, cd)
+    x = jnp.maximum(x, 0.0)  # simple ReLU projector (LLaVA-style 2-layer MLP)
+    return dense(params["fc2"], x, cd)

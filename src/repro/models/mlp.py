@@ -1,0 +1,40 @@
+"""Feed-forward blocks: SwiGLU (gated) and plain 2-layer MLP."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .common import ACT, KeyGen, Params, dense, dense_init
+
+
+def swiglu_init(key, d: int, d_ff: int, dtype, n_layers: int = 2) -> Params:
+    kg = KeyGen(key)
+    import math
+    return {
+        "w_gate": dense_init(kg(), d, d_ff, dtype),
+        "w_up": dense_init(kg(), d, d_ff, dtype),
+        "w_down": dense_init(kg(), d_ff, d, dtype, stddev=0.02 / math.sqrt(2 * n_layers)),
+    }
+
+
+def swiglu_apply(params: Params, x, act="silu", compute_dtype=None):
+    g = dense(params["w_gate"], x, compute_dtype)
+    u = dense(params["w_up"], x, compute_dtype)
+    return dense(params["w_down"], ACT[act](g) * u, compute_dtype)
+
+
+def mlp_init(key, d_in: int, hidden: int, d_out: int, n_hidden: int, dtype,
+             bias: bool = True) -> Params:
+    """Plain MLP with n_hidden hidden layers (HydraGNN head style)."""
+    kg = KeyGen(key)
+    dims = [d_in] + [hidden] * n_hidden + [d_out]
+    return {f"fc{i}": dense_init(kg(), dims[i], dims[i + 1], dtype, bias=bias)
+            for i in range(len(dims) - 1)}
+
+
+def mlp_apply(params: Params, x, act="relu", compute_dtype=None):
+    n = len(params)
+    for i in range(n):
+        x = dense(params[f"fc{i}"], x, compute_dtype)
+        if i < n - 1:
+            x = ACT[act](x)
+    return x

@@ -1,0 +1,99 @@
+"""Mixture-of-Experts layer (TPU-idiomatic, capacity-based).
+
+Dispatch is scatter-based (token->(expert,slot) indices built from a grouped
+cumsum), NOT the GShard (T,E,C) one-hot einsum — at k=6..8 and E=40..160 the
+one-hot dispatch tensor would dwarf the activations. The dispatched buffer is
+laid out (groups, E, capacity, d) so the expert dim shards over the "model"
+mesh axis (expert parallelism) and groups shard over "data".
+
+Top-k routing with per-group capacity + dropped-token dump slot, Switch-style
+load-balance aux loss, optional DeepSeek-style shared experts.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .common import ACT, KeyGen, Params, normal_init
+
+
+def moe_init(key, cfg) -> Params:
+    kg = KeyGen(key)
+    d, E, dff = cfg.d_model, cfg.n_experts, cfg.d_ff_expert or cfg.d_ff
+    dt = cfg.param_dtype
+    p = {
+        "router": normal_init(kg(), (d, E), dt, 0.02),
+        "w_gate": normal_init(kg(), (E, d, dff), dt, 1 / math.sqrt(d)),
+        "w_up": normal_init(kg(), (E, d, dff), dt, 1 / math.sqrt(d)),
+        "w_down": normal_init(kg(), (E, dff, d), dt, 0.02 / math.sqrt(2 * cfg.n_layers)),
+    }
+    if cfg.n_shared_experts:
+        from .mlp import swiglu_init
+        p["shared"] = swiglu_init(kg(), d, dff * cfg.n_shared_experts, dt, cfg.n_layers)
+    return p
+
+
+def _capacity(gs: int, top_k: int, n_experts: int, factor: float) -> int:
+    c = int(math.ceil(gs * top_k / n_experts * factor))
+    return max(8, -(-c // 8) * 8)  # pad to multiple of 8 lanes
+
+
+def moe_apply(params: Params, x, *, cfg, group_size: int = 512):
+    """x: (B, S, d) -> (y, aux_loss). Token order is preserved."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    cd = cfg.compute_dtype
+    T = B * S
+    gs = min(group_size, T)
+    G = T // gs
+    assert G * gs == T, f"tokens {T} not divisible by group {gs}"
+    C = _capacity(gs, k, E, cfg.capacity_factor)
+
+    xf = x.reshape(G, gs, d)
+    logits = jnp.einsum("gsd,de->gse", xf.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                     # (G,gs,E)
+    gate, choice = jax.lax.top_k(probs, k)                      # (G,gs,k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # ---- positions in each expert's per-group queue ----------------------
+    cf = choice.reshape(G, gs * k)                              # token-major
+    oh = jax.nn.one_hot(cf, E, dtype=jnp.int32)                 # (G,gs*k,E)
+    pos = jnp.cumsum(oh, axis=1) * oh                           # 1-based where chosen
+    pos = jnp.sum(pos, axis=-1) - 1                             # (G,gs*k)
+    keep = pos < C
+    slot = jnp.where(keep, cf * C + pos, E * C)                 # dump slot = E*C
+
+    # ---- dispatch (scatter) ----------------------------------------------
+    xr = jnp.broadcast_to(xf[:, :, None, :], (G, gs, k, d)).reshape(G, gs * k, d)
+    buf = jnp.zeros((G, E * C + 1, d), cd)
+    buf = jax.vmap(lambda b, i, v: b.at[i].add(v))(buf, slot, xr.astype(cd))
+    ein = buf[:, : E * C].reshape(G, E, C, d)                   # (G,E,C,d)
+
+    # ---- expert FFN (batched over expert dim; shards over "model") -------
+    wg = params["w_gate"].astype(cd)
+    wu = params["w_up"].astype(cd)
+    wd = params["w_down"].astype(cd)
+    h = ACT[cfg.act](jnp.einsum("gecd,edf->gecf", ein, wg)) * jnp.einsum(
+        "gecd,edf->gecf", ein, wu)
+    eout = jnp.einsum("gecf,efd->gecd", h, wd)                  # (G,E,C,d)
+
+    # ---- combine (gather) -------------------------------------------------
+    flat = jnp.concatenate([eout.reshape(G, E * C, d),
+                            jnp.zeros((G, 1, d), cd)], axis=1)
+    yk = jax.vmap(lambda f, i: f[i])(flat, slot)                # (G,gs*k,d)
+    yk = yk * (gate.reshape(G, gs * k, 1).astype(cd) * keep[..., None])
+    y = yk.reshape(G, gs, k, d).sum(axis=2).reshape(B, S, d)
+
+    # ---- shared experts + aux loss ----------------------------------------
+    if "shared" in params:
+        from .mlp import swiglu_apply
+        y = y + swiglu_apply(params["shared"], x, cfg.act, cd)
+
+    # Switch-style load balance: E * sum_e fraction_e * mean_prob_e
+    frac = jnp.mean(jax.nn.one_hot(choice, E, dtype=jnp.float32), axis=(0, 1, 2)) * k
+    mp = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(frac * mp)
+    return y, aux

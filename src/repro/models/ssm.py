@@ -1,0 +1,479 @@
+"""State-space / recurrent blocks: Mamba2 (SSD) and xLSTM (mLSTM + sLSTM).
+
+Mamba2 uses the chunked SSD formulation (matmul-dominant — the TPU-native
+adaptation of the CUDA selective-scan: intra-chunk quadratic attention-like
+einsums feed the MXU, inter-chunk state carried by a short lax.scan).
+
+Each block exposes:
+  *_init(key, cfg)                  parameter pytree
+  *_apply(params, x, cfg)           full-sequence (train/prefill) -> (y, state)
+  *_step(params, x1, state, cfg)    single-token decode -> (y1, state)
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .common import KeyGen, Params, dense, dense_init, normal_init, rmsnorm
+
+
+# ===========================================================================
+# Mamba2 (SSD)
+# ===========================================================================
+
+def _mamba_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = cfg.ssm_heads or max(1, d_inner // 64)
+    P = d_inner // H
+    N = cfg.ssm_state
+    return d_inner, H, P, N
+
+
+def mamba2_init(key, cfg) -> Params:
+    kg = KeyGen(key)
+    d = cfg.d_model
+    d_inner, H, P, N = _mamba_dims(cfg)
+    dt = cfg.param_dtype
+    conv_ch = d_inner + 2 * N
+    return {
+        "w_in": dense_init(kg(), d, 2 * d_inner + 2 * N + H, dt),
+        "conv_w": normal_init(kg(), (cfg.conv_kernel, conv_ch), dt, 0.1),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(dt),
+        "D": jnp.ones((H,), dt),
+        "dt_bias": jnp.zeros((H,), dt),
+        "norm": {"scale": jnp.ones((d_inner,), dt)},
+        "w_out": dense_init(kg(), d_inner, d, dt,
+                            stddev=0.02 / math.sqrt(2 * max(cfg.n_layers, 1))),
+    }
+
+
+def _causal_conv(x, w, b):
+    """x: (B,S,C) depthwise causal conv, kernel K."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    y = sum(xp[:, i: i + x.shape[1]] * w[i] for i in range(K))
+    return y + b
+
+
+def _segsum(x):
+    """x: (..., Q) -> (..., Q, Q) with out[i,j] = sum_{j<m<=i} x[m], -inf above diag."""
+    Q = x.shape[-1]
+    cs = jnp.cumsum(x, -1)
+    d = cs[..., :, None] - cs[..., None, :]
+    return jnp.where(jnp.tril(jnp.ones((Q, Q), bool)), d, -jnp.inf)
+
+
+def ssd_chunked(xh, dtv, A, Bm, Cm, chunk: int):
+    """Chunked SSD. xh:(B,S,H,P) dtv:(B,S,H) A:(H,) Bm,Cm:(B,S,N).
+    Returns (y:(B,S,H,P), final_state:(B,H,P,N))."""
+    B_, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    nc = -(-S // Q)
+    if nc * Q != S:
+        # pad with dt=0 steps: decay exp(0)=1 and contribution dt*x=0, so
+        # the recurrence (and final state) are exactly preserved
+        pad = nc * Q - S
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dtv = jnp.pad(dtv, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    S_pad = nc * Q
+    f32 = jnp.float32
+    xc = xh.reshape(B_, nc, Q, H, P).astype(f32)
+    dtc = dtv.reshape(B_, nc, Q, H).astype(f32)
+    Bc = Bm.reshape(B_, nc, Q, N).astype(f32)
+    Cc = Cm.reshape(B_, nc, Q, N).astype(f32)
+    dA = dtc * A.astype(f32)                            # (B,nc,Q,H)  (negative)
+    dAh = dA.transpose(0, 1, 3, 2)                      # (B,nc,H,Q)
+    dA_cs = jnp.cumsum(dAh, -1)                         # (B,nc,H,Q)
+    xd = xc * dtc[..., None]                            # dt-weighted input
+
+    # intra-chunk (quadratic within chunk — MXU friendly)
+    L = jnp.exp(_segsum(dAh))                           # (B,nc,H,Q,Q)
+    y_diag = jnp.einsum("bcin,bcjn,bchij,bcjhp->bcihp", Cc, Bc, L, xd)
+
+    # per-chunk input->state
+    decay_states = jnp.exp(dA_cs[..., -1:] - dA_cs)     # (B,nc,H,Q)
+    states = jnp.einsum("bcjn,bchj,bcjhp->bchpn", Bc, decay_states, xd)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(dA_cs[..., -1])               # (B,nc,H)
+
+    def step(h, inp):
+        s_c, dec = inp
+        h_new = h * dec[..., None, None] + s_c
+        return h_new, h                                 # emit state BEFORE chunk
+
+    h0 = jnp.zeros((B_, H, P, N), f32)
+    hT, prev = jax.lax.scan(step, h0, (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    prev = prev.swapaxes(0, 1)                          # (B,nc,H,P,N)
+    y_off = jnp.einsum("bcin,bchpn,bchi->bcihp", Cc, prev, jnp.exp(dA_cs))
+    y = (y_diag + y_off).reshape(B_, S_pad, H, P)[:, :S]
+    return y.astype(xh.dtype), hT
+
+
+def mamba2_apply(params: Params, x, *, cfg, return_state=False):
+    B, S, d = x.shape
+    d_inner, H, P, N = _mamba_dims(cfg)
+    cd = cfg.compute_dtype
+    zxbcdt = dense(params["w_in"], x, cd)
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner: 2 * d_inner + 2 * N]
+    dtv = zxbcdt[..., 2 * d_inner + 2 * N:]
+    xBC = jax.nn.silu(_causal_conv(xBC, params["conv_w"].astype(cd),
+                                   params["conv_b"].astype(cd)))
+    xh = xBC[..., :d_inner].reshape(B, S, H, P)
+    Bm = xBC[..., d_inner: d_inner + N]
+    Cm = xBC[..., d_inner + N:]
+    dtv = jax.nn.softplus(dtv.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    y, hT = ssd_chunked(xh, dtv, A, Bm, Cm, cfg.ssm_chunk)
+    y = y + params["D"].astype(cd)[None, None, :, None] * xh
+    y = y.reshape(B, S, d_inner)
+    y = rmsnorm(params["norm"], y) * jax.nn.silu(z)
+    out = dense(params["w_out"], y, cd)
+    if return_state:
+        conv_tail = _conv_tail(x, zxbcdt, cfg)
+        return out, {"ssm": hT, "conv": conv_tail}
+    return out
+
+
+def _conv_tail(x, zxbcdt, cfg):
+    """Last (K-1) pre-conv xBC inputs, for decode cache continuity."""
+    d_inner, H, P, N = _mamba_dims(cfg)
+    K = cfg.conv_kernel
+    xBC_raw = zxbcdt[..., d_inner: 2 * d_inner + 2 * N]
+    tail = xBC_raw[:, -(K - 1):]
+    pad = (K - 1) - tail.shape[1]
+    if pad > 0:
+        tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+    return tail
+
+
+def mamba2_state_init(cfg, batch: int, dtype=jnp.float32) -> Params:
+    d_inner, H, P, N = _mamba_dims(cfg)
+    return {"ssm": jnp.zeros((batch, H, P, N), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_kernel - 1, d_inner + 2 * N), dtype)}
+
+
+def mamba2_step(params: Params, x1, state, *, cfg):
+    """x1: (B,1,d) single-token decode."""
+    B = x1.shape[0]
+    d_inner, H, P, N = _mamba_dims(cfg)
+    cd = cfg.compute_dtype
+    zxbcdt = dense(params["w_in"], x1, cd)
+    z = zxbcdt[..., :d_inner]
+    xBC_raw = zxbcdt[:, 0, d_inner: 2 * d_inner + 2 * N]
+    dtv = zxbcdt[:, 0, 2 * d_inner + 2 * N:]
+    conv = jnp.concatenate([state["conv"], xBC_raw[:, None]], axis=1)  # (B,K,C)
+    w = params["conv_w"].astype(cd)
+    xBC = jax.nn.silu(jnp.einsum("bkc,kc->bc", conv, w) + params["conv_b"].astype(cd))
+    xh = xBC[:, :d_inner].reshape(B, H, P)
+    Bm = xBC[:, d_inner: d_inner + N]
+    Cm = xBC[:, d_inner + N:]
+    dtv = jax.nn.softplus(dtv.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dtv * A)                                # (B,H)
+    h = state["ssm"] * dA[..., None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dtv, xh.astype(jnp.float32), Bm.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", h, Cm.astype(jnp.float32)).astype(cd)
+    y = y + params["D"].astype(cd)[None, :, None] * xh
+    y = y.reshape(B, 1, d_inner)
+    y = rmsnorm(params["norm"], y) * jax.nn.silu(z)
+    out = dense(params["w_out"], y, cd)
+    return out, {"ssm": h, "conv": conv[:, 1:]}
+
+
+# ===========================================================================
+# xLSTM — mLSTM (matrix memory) and sLSTM (scalar memory)
+# ===========================================================================
+
+def mlstm_init(key, cfg) -> Params:
+    kg = KeyGen(key)
+    d = cfg.d_model
+    H = cfg.n_heads
+    d_inner = 2 * d
+    dk = d_inner // H
+    dt = cfg.param_dtype
+    return {
+        "w_up": dense_init(kg(), d, 2 * d_inner, dt),      # x_in, gate z
+        "conv_w": normal_init(kg(), (4, d_inner), dt, 0.1),
+        "conv_b": jnp.zeros((d_inner,), dt),
+        "wq": dense_init(kg(), d_inner, d_inner, dt),
+        "wk": dense_init(kg(), d_inner, d_inner, dt),
+        "wv": dense_init(kg(), d_inner, d_inner, dt),
+        "wi": dense_init(kg(), d_inner, H, dt, bias=True),
+        "wf": dense_init(kg(), d_inner, H, dt, bias=True),
+        "norm": {"scale": jnp.ones((d_inner,), dt)},
+        "w_down": dense_init(kg(), d_inner, d, dt,
+                             stddev=0.02 / math.sqrt(2 * max(cfg.n_layers, 1))),
+    }
+
+
+def _mlstm_cell(q, k, v, ig, fg, state):
+    """One step. q,k,v: (B,H,dk|dv); ig,fg: (B,H) raw gates.
+    state = (C:(B,H,dv,dk), n:(B,H,dk), m:(B,H))."""
+    C, n, m = state
+    logf = jax.nn.log_sigmoid(fg)
+    m_new = jnp.maximum(logf + m, ig)
+    fp = jnp.exp(logf + m - m_new)
+    ip = jnp.exp(ig - m_new)
+    C = C * fp[..., None, None] + ip[..., None, None] * (v[..., :, None] * k[..., None, :])
+    n = n * fp[..., None] + ip[..., None] * k
+    num = jnp.einsum("bhvk,bhk->bhv", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q)), 1.0)
+    return num / den[..., None], (C, n, m_new)
+
+
+def mlstm_chunkwise(q, k, v, ig, fg, chunk: int, state=None):
+    """Chunkwise-parallel mLSTM, algebraically exact vs the step cell
+    (tests/test_ssm.py::test_mlstm_chunkwise_vs_scan).
+
+    The time-step scan keeps a (B,H,dv,dk) matrix state PER STEP alive for
+    backward — ~S x dk^2 HBM traffic. This reformulation (the TPU-native
+    adaptation, cf. SSD/GLA chunking) does intra-chunk work as masked (L,L)
+    matmuls on the MXU and carries one stabilized state per chunk:
+      scan length S -> S/L,  saved state volume / L.
+
+    q,k,v: (B,S,H,dk) f32; ig,fg: (B,S,H) raw gates. Returns (y, (C,n,m))."""
+    B, S, H, dk = q.shape
+    L = min(chunk, S)
+    nc = -(-S // L)
+    pad = nc * L - S
+    if pad:
+        # pad with fg -> +inf (f=1, no decay) and ig -> -inf (no input):
+        # the recurrence and final state pass through unchanged
+        zpad = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q = jnp.pad(q, zpad)
+        k = jnp.pad(k, zpad)
+        v = jnp.pad(v, zpad)
+        ig = jnp.pad(ig, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+        fg = jnp.pad(fg, ((0, 0), (0, pad), (0, 0)), constant_values=40.0)
+
+    def cks(x):  # (B,S,H,...) -> (nc, B, H, L, ...)
+        x = x.reshape((B, nc, L) + x.shape[2:])
+        return jnp.moveaxis(jnp.swapaxes(x, 2, 3), 1, 0) if x.ndim == 5 else \
+            jnp.moveaxis(x.transpose(0, 1, 3, 2), 1, 0)
+
+    qc = cks(q)   # (nc,B,H,L,dk)
+    kc = cks(k)
+    vc = cks(v)
+    igc = cks(ig)  # (nc,B,H,L)
+    fgc = cks(fg)
+
+    if state is None:
+        C0 = jnp.zeros((B, H, dk, dk))
+        n0 = jnp.zeros((B, H, dk))
+        m0 = jnp.full((B, H), -1e30)
+    else:
+        C0, n0, m0 = state
+
+    mask = jnp.tril(jnp.ones((L, L), bool))
+
+    def chunk_step(carry, inp):
+        C, n, m = carry                      # C:(B,H,dv,dk) n:(B,H,dk) m:(B,H)
+        qi, ki, vi, ai, fi = inp
+        logf = jax.nn.log_sigmoid(fi)        # (B,H,L)
+        b = jnp.cumsum(logf, axis=-1)        # local cumulative decay
+        g = ai - b                           # (B,H,L)
+        gmax = jax.lax.cummax(g, axis=g.ndim - 1)
+        m_i = b + jnp.maximum(m[..., None], gmax)          # (B,H,L)
+        # intra-chunk decay matrix D_ij = exp(b_i + g_j - m_i), j <= i.
+        # mask BEFORE exp: for j > i the argument can be large-positive
+        # (b_i - b_j > 0), and exp -> inf would poison the backward even
+        # under a post-hoc where (inf * 0 = NaN in the VJP).
+        arg = b[..., :, None] + g[..., None, :] - m_i[..., :, None]
+        D = jnp.exp(jnp.where(mask, arg, -jnp.inf))
+        s = jnp.einsum("bhik,bhjk->bhij", qi, ki)          # q.k
+        w = D * s
+        inter = jnp.exp(m[..., None] + b - m_i)            # (B,H,L)
+        num = jnp.einsum("bhij,bhjv->bhiv", w, vi) + \
+            inter[..., None] * jnp.einsum("bhvk,bhik->bhiv", C, qi)
+        den = jnp.sum(w, axis=-1) + inter * jnp.einsum("bhk,bhik->bhi", n, qi)
+        y = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+        # end-of-chunk state
+        bL = b[..., -1:]                                   # (B,H,1)
+        m_new = bL[..., 0] + jnp.maximum(m, gmax[..., -1])
+        sc = jnp.exp(bL + g - m_new[..., None])            # (B,H,L)
+        C_new = jnp.exp(m + bL[..., 0] - m_new)[..., None, None] * C + \
+            jnp.einsum("bhj,bhjv,bhjk->bhvk", sc, vi, ki)
+        n_new = jnp.exp(m + bL[..., 0] - m_new)[..., None] * n + \
+            jnp.einsum("bhj,bhjk->bhk", sc, ki)
+        return (C_new, n_new, m_new), y
+
+    (C, n, m), ys = jax.lax.scan(chunk_step, (C0, n0, m0),
+                                 (qc, kc, vc, igc, fgc))
+    # ys: (nc,B,H,L,dk) -> (B,S,H,dk)
+    y = jnp.moveaxis(ys, 0, 1).swapaxes(2, 3).reshape(B, nc * L, H, dk)[:, :S]
+    return y, (C, n, m)
+
+
+def mlstm_apply(params: Params, x, *, cfg, return_state=False,
+                use_chunked=None):
+    if use_chunked is None:
+        use_chunked = getattr(cfg, "mlstm_chunked", True)
+    B, S, d = x.shape
+    H = cfg.n_heads
+    d_inner = 2 * d
+    dk = d_inner // H
+    cd = cfg.compute_dtype
+    up = dense(params["w_up"], x, cd)
+    xin, z = up[..., :d_inner], up[..., d_inner:]
+    xc = jax.nn.silu(_causal_conv(xin, params["conv_w"].astype(cd),
+                                  params["conv_b"].astype(cd)))
+    q = dense(params["wq"], xc, cd).reshape(B, S, H, dk)
+    k = dense(params["wk"], xc, cd).reshape(B, S, H, dk) / math.sqrt(dk)
+    v = dense(params["wv"], xin, cd).reshape(B, S, H, dk)
+    ig = dense(params["wi"], xc, cd).astype(jnp.float32)
+    fg = dense(params["wf"], xc, cd).astype(jnp.float32)
+
+    if use_chunked:
+        yq, stT = mlstm_chunkwise(q.astype(jnp.float32), k.astype(jnp.float32),
+                                  v.astype(jnp.float32), ig, fg,
+                                  cfg.ssm_chunk or 64)
+        y = yq.reshape(B, S, d_inner).astype(cd)
+        stT = {"C": stT[0], "n": stT[1], "m": stT[2]}
+    else:
+        def step(st, inp):
+            qt, kt, vt, it, ft = inp
+            yt, st = _mlstm_cell(qt.astype(jnp.float32), kt.astype(jnp.float32),
+                                 vt.astype(jnp.float32), it, ft, st)
+            return st, yt
+
+        st0 = (jnp.zeros((B, H, dk, dk)), jnp.zeros((B, H, dk)),
+               jnp.full((B, H), -1e30))
+        st, ys = jax.lax.scan(step, st0, (q.swapaxes(0, 1), k.swapaxes(0, 1),
+                                          v.swapaxes(0, 1), ig.swapaxes(0, 1),
+                                          fg.swapaxes(0, 1)))
+        y = ys.swapaxes(0, 1).reshape(B, S, d_inner).astype(cd)
+        stT = {"C": st[0], "n": st[1], "m": st[2]}
+
+    y = rmsnorm(params["norm"], y) * jax.nn.silu(z)
+    out = dense(params["w_down"], y, cd)
+    if return_state:
+        conv_tail = xin[:, -3:]
+        pad = 3 - conv_tail.shape[1]
+        if pad > 0:
+            conv_tail = jnp.pad(conv_tail, ((0, 0), (pad, 0), (0, 0)))
+        return out, dict(stT, conv=conv_tail)
+    return out
+
+
+def mlstm_state_init(cfg, batch: int, dtype=None) -> Params:
+    H = cfg.n_heads
+    d_inner = 2 * cfg.d_model
+    dk = d_inner // H
+    return {"C": jnp.zeros((batch, H, dk, dk)), "n": jnp.zeros((batch, H, dk)),
+            "m": jnp.full((batch, H), -1e30),
+            "conv": jnp.zeros((batch, 3, d_inner), dtype or cfg.compute_dtype)}
+
+
+def mlstm_step(params: Params, x1, state, *, cfg):
+    B = x1.shape[0]
+    d = cfg.d_model
+    H = cfg.n_heads
+    d_inner = 2 * d
+    dk = d_inner // H
+    cd = cfg.compute_dtype
+    up = dense(params["w_up"], x1, cd)
+    xin, z = up[:, 0, :d_inner], up[:, 0, d_inner:]
+    conv = jnp.concatenate([state["conv"], xin[:, None]], axis=1)
+    xc = jax.nn.silu(jnp.einsum("bkc,kc->bc", conv, params["conv_w"].astype(cd))
+                     + params["conv_b"].astype(cd))
+    q = dense(params["wq"], xc, cd).reshape(B, H, dk)
+    k = dense(params["wk"], xc, cd).reshape(B, H, dk) / math.sqrt(dk)
+    v = dense(params["wv"], xin, cd).reshape(B, H, dk)
+    ig = dense(params["wi"], xc, cd).astype(jnp.float32)
+    fg = dense(params["wf"], xc, cd).astype(jnp.float32)
+    y, (C, n, m) = _mlstm_cell(q.astype(jnp.float32), k.astype(jnp.float32),
+                               v.astype(jnp.float32), ig, fg,
+                               (state["C"], state["n"], state["m"]))
+    y = y.reshape(B, 1, d_inner).astype(cd)
+    y = rmsnorm(params["norm"], y) * jax.nn.silu(z[:, None])
+    out = dense(params["w_down"], y, cd)
+    return out, {"C": C, "n": n, "m": m, "conv": conv[:, 1:]}
+
+
+def slstm_init(key, cfg) -> Params:
+    kg = KeyGen(key)
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    dt = cfg.param_dtype
+    ff = 2 * d  # xLSTM sLSTM post-FFN (proj-factor deviation noted in DESIGN.md)
+    return {
+        "w_gates": dense_init(kg(), d, 4 * d, dt, bias=True),   # i,f,z,o from x
+        "r_gates": normal_init(kg(), (H, dh, 4 * dh), dt, 1 / math.sqrt(dh)),
+        "norm": {"scale": jnp.ones((d,), dt)},
+        "w_ff_up": dense_init(kg(), d, ff, dt),
+        "w_ff_down": dense_init(kg(), ff, d, dt,
+                                stddev=0.02 / math.sqrt(2 * max(cfg.n_layers, 1))),
+    }
+
+
+def _slstm_cell(gx, h_prev, state, r, H, dh):
+    """gx: (B,4d) input gate pre-acts; h_prev: (B,d); state=(c,n,m) each (B,d)."""
+    c, n, m = state
+    B = gx.shape[0]
+    hr = h_prev.reshape(B, H, dh)
+    gr = jnp.einsum("bhd,hdk->bhk", hr, r).reshape(B, 4 * H * dh)
+    g = (gx + gr).reshape(B, 4, H * dh)
+    ig, fg, zg, og = g[:, 0], g[:, 1], g[:, 2], g[:, 3]
+    logf = jax.nn.log_sigmoid(fg)
+    m_new = jnp.maximum(logf + m, ig)
+    ip = jnp.exp(ig - m_new)
+    fp = jnp.exp(logf + m - m_new)
+    c = fp * c + ip * jnp.tanh(zg)
+    n = fp * n + ip
+    h = jax.nn.sigmoid(og) * c / jnp.maximum(n, 1.0)
+    return h, (c, n, m_new)
+
+
+def slstm_apply(params: Params, x, *, cfg, return_state=False):
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    cd = cfg.compute_dtype
+    gx = dense(params["w_gates"], x, cd).astype(jnp.float32)
+    r = params["r_gates"].astype(jnp.float32)
+
+    def step(carry, g):
+        h_prev, st = carry
+        h, st = _slstm_cell(g, h_prev, st, r, H, dh)
+        return (h, st), h
+
+    st0 = (jnp.zeros((B, d)), jnp.zeros((B, d)), jnp.full((B, d), -1e30))
+    (hT, stT), hs = jax.lax.scan(step, (jnp.zeros((B, d)), st0), gx.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).astype(cd)
+    y = rmsnorm(params["norm"], y)
+    ff = dense(params["w_ff_down"],
+               jax.nn.gelu(dense(params["w_ff_up"], y, cd)), cd)
+    out = ff
+    if return_state:
+        return out, {"h": hT, "c": stT[0], "n": stT[1], "m": stT[2]}
+    return out
+
+
+def slstm_state_init(cfg, batch: int, dtype=None) -> Params:
+    d = cfg.d_model
+    return {"h": jnp.zeros((batch, d)), "c": jnp.zeros((batch, d)),
+            "n": jnp.zeros((batch, d)), "m": jnp.full((batch, d), -1e30)}
+
+
+def slstm_step(params: Params, x1, state, *, cfg):
+    B = x1.shape[0]
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    cd = cfg.compute_dtype
+    gx = dense(params["w_gates"], x1, cd).astype(jnp.float32)[:, 0]
+    r = params["r_gates"].astype(jnp.float32)
+    h, (c, n, m) = _slstm_cell(gx, state["h"], (state["c"], state["n"], state["m"]),
+                               r, H, dh)
+    y = rmsnorm(params["norm"], h[:, None].astype(cd))
+    out = dense(params["w_ff_down"], jax.nn.gelu(dense(params["w_ff_up"], y, cd)), cd)
+    return out, {"h": h, "c": c, "n": n, "m": m}

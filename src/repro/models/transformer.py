@@ -1,0 +1,424 @@
+"""Transformer assembly: decoder-only LMs and encoder-decoder models.
+
+Layers are organised by the config's ``block_pattern`` unit; repetitions of
+the unit are stacked and driven by ``lax.scan`` (small HLO, fast compile for
+60-layer models), with any remainder layers unrolled. Per-layer remat via
+``jax.checkpoint`` around each block when ``cfg.remat``.
+
+Block types (pattern entries): attn | swa | mla | mamba2 | mlstm | slstm |
+shared_attn (zamba-style shared-weight attention with per-application LoRA)
+| enc_attn (bidirectional) | dec_attn (self+cross, enc-dec only).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (gqa_apply, gqa_cache_init, gqa_init, mla_apply,
+                        mla_cache_init, mla_init, sdpa)
+from .common import (KeyGen, Params, dense, dense_init, embed, embedding_init,
+                     layernorm, normal_init, rmsnorm, unembed)
+from .mlp import swiglu_apply, swiglu_init
+from .moe import moe_apply, moe_init
+from .ssm import (mamba2_apply, mamba2_init, mamba2_state_init, mamba2_step,
+                  mlstm_apply, mlstm_init, mlstm_state_init, mlstm_step,
+                  slstm_apply, slstm_init, slstm_state_init, slstm_step)
+
+ATTN_TYPES = ("attn", "swa", "mla", "shared_attn", "enc_attn")
+SSM_TYPES = ("mamba2", "mlstm", "slstm")
+LORA_RANK = 64  # zamba2-style per-application adapters on the shared block
+
+
+def _norm(cfg):
+    return rmsnorm if cfg.norm == "rmsnorm" else layernorm
+
+
+def _norm_init(cfg, d=None):
+    d = d or cfg.d_model
+    if cfg.norm == "rmsnorm":
+        return {"scale": jnp.ones((d,), cfg.param_dtype)}
+    return {"scale": jnp.ones((d,), cfg.param_dtype),
+            "bias": jnp.zeros((d,), cfg.param_dtype)}
+
+
+def _has_ffn(btype: str) -> bool:
+    return btype in ("attn", "swa", "mla", "enc_attn", "dec_attn")
+
+
+# ---------------------------------------------------------------------------
+# Block init / apply
+# ---------------------------------------------------------------------------
+
+def block_init(key, cfg, btype: str) -> Params:
+    kg = KeyGen(key)
+    p: Params = {"ln1": _norm_init(cfg)}
+    if btype in ("attn", "swa", "enc_attn"):
+        p["attn"] = gqa_init(kg(), cfg)
+    elif btype == "mla":
+        p["attn"] = mla_init(kg(), cfg)
+    elif btype == "shared_attn":
+        d, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+        dt = cfg.param_dtype
+        for nm, dout in (("q", H * hd), ("k", K * hd), ("v", K * hd)):
+            p[f"lora_{nm}_a"] = normal_init(kg(), (d, LORA_RANK), dt, 0.02)
+            p[f"lora_{nm}_b"] = jnp.zeros((LORA_RANK, dout), dt)
+    elif btype == "mamba2":
+        p["mixer"] = mamba2_init(kg(), cfg)
+    elif btype == "mlstm":
+        p["mixer"] = mlstm_init(kg(), cfg)
+    elif btype == "slstm":
+        p["mixer"] = slstm_init(kg(), cfg)
+    if btype == "dec_attn":
+        p["attn"] = gqa_init(kg(), cfg)
+        p["ln_x"] = _norm_init(cfg)
+        p["xattn"] = gqa_init(kg(), cfg)
+    if _has_ffn(btype):
+        p["ln2"] = _norm_init(cfg)
+        if cfg.n_experts and btype != "enc_attn":
+            p["ffn"] = moe_init(kg(), cfg)
+        else:
+            p["ffn"] = swiglu_init(kg(), cfg.d_model, cfg.d_ff, cfg.param_dtype,
+                                   cfg.n_layers or 2)
+    return p
+
+
+def _shared_attn_params(shared: Params, bp: Params, cfg):
+    """Merge shared base weights with this application's LoRA deltas."""
+    cd = cfg.compute_dtype
+    out = {}
+    for nm, key in (("q", "wq"), ("k", "wk"), ("v", "wv")):
+        w = shared[key]["w"].astype(cd) + (
+            bp[f"lora_{nm}_a"].astype(cd) @ bp[f"lora_{nm}_b"].astype(cd))
+        out[key] = {"w": w}
+    out["wo"] = {"w": shared["wo"]["w"].astype(cd)}
+    return out
+
+
+def block_apply(bp: Params, x, *, btype, cfg, positions, cache=None,
+                mode="train", shared=None, memory=None, impl="chunked"):
+    """Returns (x, new_cache, aux). cache semantics:
+    mode=="train": cache ignored/None;  "prefill": returns init'd cache;
+    "decode": cache consumed and updated."""
+    nrm = _norm(cfg)
+    aux = jnp.zeros((), jnp.float32)
+    h = nrm(bp["ln1"], x)
+    new_cache = None
+
+    if btype in ("attn", "swa", "shared_attn", "enc_attn", "dec_attn"):
+        ap = _shared_attn_params(shared, bp, cfg) if btype == "shared_attn" else bp["attn"]
+        window = cfg.window if btype in ("swa", "shared_attn") and cfg.window else 0
+        if btype == "swa":
+            window = cfg.window
+        causal = btype != "enc_attn"
+        if mode == "decode":
+            sa = cache["self"] if btype == "dec_attn" else cache
+            o, nc = gqa_apply(ap, h, cfg=cfg, positions=positions, window=window,
+                              cache=sa, impl=impl)
+        elif mode == "prefill":
+            o, nc = gqa_apply(ap, h, cfg=cfg, positions=positions, window=window,
+                              cache="init", impl=impl)
+        else:
+            o = gqa_apply(ap, h, cfg=cfg, positions=positions, window=window,
+                          impl=impl) if causal else _bidir_attn(ap, h, cfg, positions, impl)
+            nc = None
+        x = x + o
+        if btype == "dec_attn":
+            hx = nrm(bp["ln_x"], x)
+            xo = _cross_attn(bp["xattn"], hx, memory, cfg, impl)
+            x = x + xo
+            nc = {"self": nc} if nc is not None else None
+        new_cache = nc
+    elif btype == "mla":
+        if mode == "decode":
+            o, new_cache = mla_apply(bp["attn"], h, cfg=cfg, positions=positions,
+                                     cache=cache, impl=impl)
+        elif mode == "prefill":
+            o, new_cache = mla_apply(bp["attn"], h, cfg=cfg, positions=positions,
+                                     cache="init", impl=impl)
+        else:
+            o = mla_apply(bp["attn"], h, cfg=cfg, positions=positions, impl=impl)
+        x = x + o
+    elif btype == "mamba2":
+        if mode == "decode":
+            o, new_cache = mamba2_step(bp["mixer"], h, cache, cfg=cfg)
+        elif mode == "prefill":
+            o, new_cache = mamba2_apply(bp["mixer"], h, cfg=cfg, return_state=True)
+        else:
+            o = mamba2_apply(bp["mixer"], h, cfg=cfg)
+        x = x + o
+    elif btype in ("mlstm", "slstm"):
+        fns = {"mlstm": (mlstm_apply, mlstm_step), "slstm": (slstm_apply, slstm_step)}[btype]
+        if mode == "decode":
+            o, new_cache = fns[1](bp["mixer"], h, cache, cfg=cfg)
+        elif mode == "prefill":
+            o, new_cache = fns[0](bp["mixer"], h, cfg=cfg, return_state=True)
+        else:
+            o = fns[0](bp["mixer"], h, cfg=cfg)
+        x = x + o
+
+    if _has_ffn(btype):
+        h2 = nrm(bp["ln2"], x)
+        if cfg.n_experts and btype != "enc_attn":
+            f, aux = moe_apply(bp["ffn"], h2, cfg=cfg)
+        else:
+            f = swiglu_apply(bp["ffn"], h2, cfg.act, cfg.compute_dtype)
+        x = x + f
+    return x, new_cache, aux
+
+
+def _bidir_attn(ap, h, cfg, positions, impl):
+    from .attention import sdpa as _sdpa
+    B, S, _ = h.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    cd = cfg.compute_dtype
+    from .common import dense as _d
+    from .attention import apply_rope
+    q = _d(ap["wq"], h, cd).reshape(B, S, H, hd)
+    k = _d(ap["wk"], h, cd).reshape(B, S, K, hd)
+    v = _d(ap["wv"], h, cd).reshape(B, S, K, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    o = _sdpa(q, k, v, q_pos=positions, k_pos=positions, causal=False, impl=impl)
+    return _d(ap["wo"], o.reshape(B, S, H * hd), cd)
+
+
+def _cross_attn(ap, h, memory, cfg, impl):
+    """Decoder cross-attention to fixed encoder memory (no causal mask)."""
+    B, S, _ = h.shape
+    M = memory.shape[1]
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    cd = cfg.compute_dtype
+    q = dense(ap["wq"], h, cd).reshape(B, S, H, hd)
+    k = dense(ap["wk"], memory, cd).reshape(B, M, K, hd)
+    v = dense(ap["wv"], memory, cd).reshape(B, M, K, hd)
+    o = sdpa(q, k, v, q_pos=jnp.zeros((S,), jnp.int32),
+             k_pos=jnp.zeros((M,), jnp.int32), causal=False, impl=impl)
+    return dense(ap["wo"], o.reshape(B, S, H * hd), cd)
+
+
+def block_cache_init(cfg, btype, batch, cache_len):
+    if btype in ("attn", "mla") and btype == "mla":
+        pass
+    if btype == "mla":
+        return mla_cache_init(cfg, batch, cache_len)
+    if btype in ("attn", "enc_attn"):
+        return gqa_cache_init(cfg, batch, cache_len)
+    if btype in ("swa", "shared_attn"):
+        w = cfg.window or cache_len
+        return gqa_cache_init(cfg, batch, min(w, cache_len))
+    if btype == "dec_attn":
+        return {"self": gqa_cache_init(cfg, batch, cache_len)}
+    if btype == "mamba2":
+        return mamba2_state_init(cfg, batch)
+    if btype == "mlstm":
+        return mlstm_state_init(cfg, batch)
+    if btype == "slstm":
+        return slstm_state_init(cfg, batch)
+    raise ValueError(btype)
+
+
+# ---------------------------------------------------------------------------
+# LM (decoder-only) — trunk + head split for multi-task parallelism
+# ---------------------------------------------------------------------------
+
+def _pattern_split(cfg):
+    unit = tuple(cfg.block_pattern)
+    reps = cfg.n_layers // len(unit)
+    rem = cfg.pattern[reps * len(unit):]
+    return unit, reps, rem
+
+
+def lm_init(key, cfg) -> Params:
+    kg = KeyGen(key)
+    unit, reps, rem = _pattern_split(cfg)
+    p: Params = {"embed": embedding_init(kg(), cfg.padded_vocab, cfg.d_model, cfg.param_dtype)}
+    if reps > 0:
+        p["scan"] = {}
+        for u, btype in enumerate(unit):
+            keys = jax.random.split(kg(), reps)
+            p["scan"][f"u{u}"] = jax.vmap(lambda k: block_init(k, cfg, btype))(keys)
+    p["rem"] = {f"r{i}": block_init(kg(), cfg, bt) for i, bt in enumerate(rem)}
+    if "shared_attn" in cfg.pattern:
+        p["shared_attn"] = gqa_init(kg(), cfg)
+    if cfg.modality in ("vision_embed", "audio_embed"):
+        from .frontends import projector_init
+        p["projector"] = projector_init(kg(), cfg)
+    p["ln_f"] = _norm_init(cfg)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(kg(), cfg.d_model, cfg.padded_vocab, cfg.param_dtype)
+    if cfg.n_tasks > 1:
+        # the paper's technique: per-source decoding heads, task-shardable
+        p["task_heads"] = {
+            "w": normal_init(kg(), (cfg.n_tasks, cfg.d_model, cfg.padded_vocab),
+                             cfg.param_dtype, 0.02)}
+    if cfg.n_enc_layers:
+        p["enc"] = {"blocks": {f"e{i}": block_init(kg(), cfg, "enc_attn")
+                               for i in range(cfg.n_enc_layers)},
+                    "ln_f": _norm_init(cfg)}
+    return p
+
+
+def _maybe_remat(fn, cfg, mode):
+    if cfg.remat and mode == "train":
+        return jax.checkpoint(fn, prevent_cse=False)
+    return fn
+
+
+def run_trunk(params: Params, x, *, cfg, positions, mode="train", caches=None,
+              memory=None, impl="chunked"):
+    """x: (B,S,d) embedded inputs -> (hidden, new_caches, aux)."""
+    unit, reps, rem = _pattern_split(cfg)
+    aux = jnp.zeros((), jnp.float32)
+    shared = params.get("shared_attn")
+    new_caches: Params = {}
+
+    if reps > 0:
+        def unit_body(x, bps, cs):
+            a = jnp.zeros((), jnp.float32)
+            ncs = []
+            for u, btype in enumerate(unit):
+                fn = partial(block_apply, btype=btype, cfg=cfg, positions=positions,
+                             mode=mode, shared=shared, memory=memory, impl=impl)
+                fn = _maybe_remat(fn, cfg, mode)
+                x, nc, a_u = fn(bps[u], x, cache=cs[u] if cs is not None else None)
+                ncs.append(nc)
+                a = a + a_u
+            return x, tuple(ncs), a
+
+        stacked = tuple(params["scan"][f"u{u}"] for u in range(len(unit)))
+        if mode == "train":
+            def body(carry, bps):
+                x, a = carry
+                x, _, au = unit_body(x, bps, None)
+                return (x, a + au), None
+            (x, aux), _ = jax.lax.scan(body, (x, aux), stacked)
+        elif mode == "prefill":
+            # prefill inits caches inside block_apply; scan stacks them
+            def body2(carry, bps):
+                x, a = carry
+                a_u = jnp.zeros((), jnp.float32)
+                ncs = []
+                xx = x
+                for u, btype in enumerate(unit):
+                    xx, nc, au = block_apply(bps[u], xx, btype=btype, cfg=cfg,
+                                             positions=positions, mode="prefill",
+                                             shared=shared, memory=memory, impl=impl)
+                    ncs.append(nc)
+                    a_u = a_u + au
+                return (xx, a + a_u), tuple(ncs)
+            (x, aux), scan_caches = jax.lax.scan(body2, (x, aux), stacked)
+            new_caches["scan"] = scan_caches
+        else:  # decode
+            def body(carry, xs):
+                x, a = carry
+                bps, cs = xs
+                x, ncs, au = unit_body(x, bps, cs)
+                return (x, a + au), ncs
+            (x, aux), scan_caches = jax.lax.scan(
+                body, (x, aux), (stacked, caches["scan"]))
+            new_caches["scan"] = scan_caches
+
+    for i, btype in enumerate(rem):
+        bp = params["rem"][f"r{i}"]
+        c = caches["rem"][f"r{i}"] if (caches and "rem" in caches) else None
+        fn = partial(block_apply, btype=btype, cfg=cfg, positions=positions,
+                     mode=mode, shared=shared, memory=memory, impl=impl)
+        fn = _maybe_remat(fn, cfg, mode)
+        x, nc, au = fn(bp, x, cache=c)
+        aux = aux + au
+        if nc is not None:
+            new_caches.setdefault("rem", {})[f"r{i}"] = nc
+
+    x = _norm(cfg)(params["ln_f"], x)
+    return x, (new_caches if new_caches else None), aux
+
+
+def embed_inputs(params, tokens, cfg, media=None):
+    """tokens: (B, S_text) int; media: raw frontend embeddings
+    (B, n_media, d_frontend) or None -> (B, S, d_model)."""
+    x = embed(params["embed"], tokens, cfg.compute_dtype)
+    if media is not None:
+        from .frontends import projector_apply
+        media = projector_apply(params["projector"], media, cfg)
+        x = jnp.concatenate([media.astype(x.dtype), x], axis=1)
+    return x
+
+
+def _mask_pad_vocab(logits, cfg):
+    """Padded vocab slots get -inf so softmax/xent ignore them."""
+    if cfg.padded_vocab > cfg.vocab:
+        vid = jnp.arange(cfg.padded_vocab)
+        return jnp.where(vid < cfg.vocab, logits, -1e30)
+    return logits
+
+
+def lm_logits(params, hidden, cfg, task: int | None = None):
+    if cfg.n_tasks > 1:
+        w = params["task_heads"]["w"].astype(hidden.dtype)
+        if task is not None:
+            w = w[task]
+            out = jnp.einsum("...d,dv->...v", hidden, w,
+                             preferred_element_type=jnp.float32)
+        else:
+            # hidden: (n_tasks, B, S, d) task-sharded layout
+            out = jnp.einsum("tbsd,tdv->tbsv", hidden, w,
+                             preferred_element_type=jnp.float32)
+    elif "lm_head" in params:
+        out = dense(params["lm_head"], hidden, cfg.compute_dtype).astype(jnp.float32)
+    else:
+        out = unembed(params["embed"], hidden)
+    return _mask_pad_vocab(out, cfg)
+
+
+def encode(params, src_embed, cfg, impl="chunked"):
+    """Encoder for enc-dec models. src_embed: raw frontend frames
+    (B, S_src, d_frontend) -> memory (B, S_src, d_model)."""
+    if cfg.modality in ("vision_embed", "audio_embed"):
+        from .frontends import projector_apply
+        src_embed = projector_apply(params["projector"], src_embed, cfg)
+    x = src_embed.astype(cfg.compute_dtype)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    for i in range(cfg.n_enc_layers):
+        bp = params["enc"]["blocks"][f"e{i}"]
+        x, _, _ = block_apply(bp, x, btype="enc_attn", cfg=cfg, positions=positions,
+                              mode="train", impl=impl)
+    return _norm(cfg)(params["enc"]["ln_f"], x)
+
+
+def lm_apply(params: Params, tokens, *, cfg, media=None, memory=None,
+             mode="train", caches=None, positions=None, impl="chunked",
+             task=None):
+    """Full LM forward. Returns (logits, new_caches, aux)."""
+    if mode == "decode":
+        x = embed(params["embed"], tokens, cfg.compute_dtype)  # (B,1,d)
+    else:
+        x = embed_inputs(params, tokens, cfg, media)
+    if positions is None:
+        positions = jnp.arange(x.shape[1])
+    if cfg.n_enc_layers and memory is None and mode != "decode":
+        raise ValueError("enc-dec model needs encoder memory")
+    h, ncaches, aux = run_trunk(params, x, cfg=cfg, positions=positions,
+                                mode=mode, caches=caches, memory=memory, impl=impl)
+    logits = lm_logits(params, h, cfg, task=task)
+    return logits, ncaches, aux
+
+
+def lm_cache_init(params, cfg, batch: int, cache_len: int) -> Params:
+    unit, reps, rem = _pattern_split(cfg)
+    caches: Params = {}
+    if reps > 0:
+        per_unit = []
+        for btype in unit:
+            one = block_cache_init(cfg, btype, batch, cache_len)
+            stacked = jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a, (reps,) + a.shape).copy(), one)
+            per_unit.append(stacked)
+        caches["scan"] = tuple(per_unit)
+    if rem:
+        caches["rem"] = {f"r{i}": block_cache_init(cfg, bt, batch, cache_len)
+                         for i, bt in enumerate(rem)}
+    return caches

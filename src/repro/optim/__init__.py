@@ -1,0 +1,2 @@
+from .adamw import AdamWState, Optimizer, adamw, global_norm  # noqa: F401
+from .schedules import constant, warmup_cosine  # noqa: F401

@@ -1,0 +1,79 @@
+"""Sharding-aware checkpointing (pure numpy .npz + JSON metadata).
+
+Save: gather every leaf to host (works for sharded arrays — jax.device_get
+assembles the global view) and write one .npz with '/'-joined tree paths.
+Restore: load arrays and ``jax.device_put`` each leaf to the sharding of a
+template tree (so a checkpoint written on one mesh restores onto another —
+e.g. single-pod -> multi-pod elasticity).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif hasattr(tree, "_fields"):  # NamedTuple (before generic tuple!)
+        for k in tree._fields:
+            out.update(_flatten(getattr(tree, k), f"{prefix}{k}/"))
+    elif isinstance(tree, (tuple, list)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}__{i}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def save(path: str, tree: Any, metadata: dict | None = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    arrs = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+    np.savez(path if path.endswith(".npz") else path + ".npz", **arrs)
+    if metadata is not None:
+        with open(path.replace(".npz", "") + ".meta.json", "w") as f:
+            json.dump(metadata, f, indent=2)
+
+
+def restore(path: str, template: Any) -> Any:
+    """template: a pytree of arrays OR ShapeDtypeStructs (possibly with
+    .sharding) with the target structure."""
+    p = path if path.endswith(".npz") else path + ".npz"
+    data = np.load(p)
+    flat_t = _flatten(template)
+
+    def put(k, t):
+        arr = jnp.asarray(data[k], dtype=t.dtype)
+        assert arr.shape == tuple(t.shape), f"{k}: {arr.shape} vs {t.shape}"
+        sh = getattr(t, "sharding", None)
+        if sh is not None and not isinstance(sh, jax.sharding.SingleDeviceSharding):
+            return jax.device_put(arr, sh)
+        return arr
+
+    new_flat = {k: put(k, t) for k, t in flat_t.items()}
+    return _unflatten_like(template, new_flat, "")
+
+
+def _unflatten_like(tree, flat, prefix):
+    if isinstance(tree, dict):
+        return {k: _unflatten_like(v, flat, f"{prefix}{k}/") for k, v in tree.items()}
+    if isinstance(tree, tuple) and hasattr(tree, "_fields"):
+        return type(tree)(**{k: _unflatten_like(getattr(tree, k), flat, f"{prefix}{k}/")
+                             for k in tree._fields})
+    if isinstance(tree, (tuple, list)):
+        vals = [_unflatten_like(v, flat, f"{prefix}__{i}/") for i, v in enumerate(tree)]
+        return type(tree)(vals) if isinstance(tree, list) else tuple(vals)
+    return flat[prefix[:-1]]
+
+
+def load_metadata(path: str) -> dict:
+    with open(path.replace(".npz", "") + ".meta.json") as f:
+        return json.load(f)

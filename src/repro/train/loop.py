@@ -1,0 +1,109 @@
+"""Training loop utilities: step factories, metrics, early stopping.
+
+``make_lm_train_step`` is the single-task (standard) LM step used by the
+assigned-architecture configs; the multi-task step lives in
+``repro.core.taskpar`` (the paper's technique). Both support gradient
+accumulation (microbatching) — the memory knob for the big dry-run configs.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mtl import softmax_xent
+from repro.models import transformer
+
+
+def make_lm_loss(cfg, impl="chunked"):
+    def loss_fn(params, batch):
+        memory = batch.get("memory")
+        if cfg.n_enc_layers and memory is None:
+            memory = transformer.encode(params, batch["src_embed"], cfg, impl)
+        logits, _, aux = transformer.lm_apply(
+            params, batch["tokens"], cfg=cfg, media=batch.get("media"),
+            memory=memory, mode="train", impl=impl)
+        # media tokens prepended: align logits to text labels
+        if batch.get("media") is not None:
+            logits = logits[:, batch["media"].shape[1]:]
+        l = softmax_xent(logits, batch["labels"])
+        if cfg.n_experts:
+            l = l + cfg.router_aux_coef * aux
+        return l
+    return loss_fn
+
+
+def make_lm_train_step(cfg, optimizer, impl="chunked", accum: int = 1):
+    loss_fn = make_lm_loss(cfg, impl)
+
+    def step(params, opt_state, batch):
+        if accum == 1:
+            l, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def micro(carry, mb):
+                acc_l, acc_g = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                return (acc_l + l, jax.tree_util.tree_map(jnp.add, acc_g, g)), None
+            micro_batches = jax.tree_util.tree_map(
+                lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]),
+                batch)
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (l, grads), _ = jax.lax.scan(micro, (jnp.zeros(()), zeros),
+                                         micro_batches)
+            l = l / accum
+            grads = jax.tree_util.tree_map(lambda g: g / accum, grads)
+        new_params, new_state = optimizer.update(grads, opt_state, params)
+        return new_params, new_state, l
+    return step
+
+
+@dataclass
+class EarlyStopping:
+    """Paper §5.1: early stopping to avoid redundant computation."""
+    patience: int = 10
+    min_delta: float = 1e-4
+    best: float = float("inf")
+    bad: int = 0
+
+    def update(self, val: float) -> bool:
+        """Returns True if training should stop."""
+        if val < self.best - self.min_delta:
+            self.best, self.bad = val, 0
+        else:
+            self.bad += 1
+        return self.bad >= self.patience
+
+
+@dataclass
+class MetricLogger:
+    history: list = field(default_factory=list)
+    t0: float = field(default_factory=time.time)
+
+    def log(self, step: int, **metrics):
+        row = {"step": step, "wall": time.time() - self.t0}
+        row.update({k: float(v) for k, v in metrics.items()})
+        self.history.append(row)
+        return row
+
+
+def train_loop(step_fn, params, opt_state, batches, *, epochs_or_steps: int,
+               eval_fn=None, eval_every: int = 50, early_stop: EarlyStopping | None = None,
+               logger: MetricLogger | None = None, verbose: bool = False):
+    logger = logger or MetricLogger()
+    for i in range(epochs_or_steps):
+        batch = batches() if callable(batches) else next(batches)
+        out = step_fn(params, opt_state, batch)
+        params, opt_state, loss = out[0], out[1], out[2]
+        if (i + 1) % eval_every == 0 or i == 0:
+            row = logger.log(i, loss=loss)
+            if eval_fn is not None:
+                row.update(eval_fn(params))
+            if verbose:
+                print(row)
+            if early_stop is not None and early_stop.update(float(loss)):
+                break
+    return params, opt_state, logger

@@ -1,0 +1,90 @@
+"""Serving: prefill / decode step factories and batched generation.
+
+Decode shapes in the assignment (decode_32k, long_500k) are exactly one
+``decode_step`` with a full-length cache; ``generate`` chains
+prefill -> extend -> decode for the runnable serving example.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+
+
+def extend_caches(caches, cfg, capacity: int):
+    """Pad prefill-produced attention caches (length S) to ``capacity``.
+    SSM/xLSTM state caches are fixed-size and pass through unchanged."""
+    def pad(leaf):
+        # attention caches are (B, S, K, hd)/(B, S, r); states keep rank<4 or
+        # carry no sequence dim — identified by the dict keys below instead.
+        return leaf
+
+    def fix(tree):
+        if isinstance(tree, dict):
+            out = {}
+            for k, v in tree.items():
+                if k in ("k", "v", "ckv", "krope") and hasattr(v, "shape"):
+                    # leading (reps,) stack possible: pad the seq axis
+                    seq_ax = v.ndim - 3 if k in ("k", "v") else v.ndim - 2
+                    cur = v.shape[seq_ax]
+                    cap = capacity
+                    if k in ("k", "v") and cfg.window and cur >= cfg.window:
+                        cap = cur  # rolling window cache already at capacity
+                    if cap > cur:
+                        padw = [(0, 0)] * v.ndim
+                        padw[seq_ax] = (0, cap - cur)
+                        v = jnp.pad(v, padw)
+                    out[k] = v
+                elif isinstance(v, (dict, tuple)):
+                    out[k] = fix(v)
+                else:
+                    out[k] = v
+            return out
+        if isinstance(tree, tuple):
+            return tuple(fix(t) for t in tree)
+        return tree
+
+    return fix(caches)
+
+
+def make_prefill_step(cfg, impl="chunked"):
+    def prefill(params, tokens, media=None, memory=None):
+        logits, caches, _ = transformer.lm_apply(
+            params, tokens, cfg=cfg, media=media, memory=memory,
+            mode="prefill", impl=impl)
+        return logits, caches
+    return prefill
+
+
+def make_decode_step(cfg, impl="chunked", task=None):
+    def decode(params, token, caches, pos, memory=None):
+        """token: (B,1) int; pos: scalar absolute position."""
+        logits, caches, _ = transformer.lm_apply(
+            params, token, cfg=cfg, mode="decode", caches=caches,
+            positions=jnp.reshape(pos, (1,)), memory=memory, impl=impl,
+            task=task)
+        return logits, caches
+    return decode
+
+
+def greedy_generate(params, cfg, prompt_tokens, n_new: int, *, impl="chunked",
+                    capacity: int | None = None, memory=None):
+    """prompt_tokens: (B, S). Returns (B, n_new) greedy continuation."""
+    B, S = prompt_tokens.shape
+    capacity = capacity or (S + n_new)
+    prefill = jax.jit(make_prefill_step(cfg, impl))
+    decode = jax.jit(make_decode_step(cfg, impl))
+    logits, caches = prefill(params, prompt_tokens, memory=memory)
+    caches = extend_caches(caches, cfg, capacity)
+    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    out = [tok]
+    pos = S
+    for _ in range(n_new - 1):
+        logits, caches = decode(params, tok, caches, jnp.asarray(pos), memory=memory)
+        tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+        out.append(tok)
+        pos += 1
+    return jnp.concatenate(out, axis=1)

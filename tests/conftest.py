@@ -1,0 +1,10 @@
+import os
+
+# Tests run on the single real CPU device — the 512-device XLA flag is
+# confined to launch/dryrun.py (and subprocesses spawned by tests that need
+# a multi-device mesh set their own env).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

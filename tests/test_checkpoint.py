@@ -1,0 +1,36 @@
+"""Checkpoint roundtrip incl. NamedTuple optimizer state."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import adamw
+from repro.train import checkpoint
+
+
+def test_roundtrip(tmp_path):
+    params = {"a": {"w": jnp.arange(6.0).reshape(2, 3)},
+              "b": (jnp.ones(4), jnp.zeros((2, 2), jnp.int32))}
+    opt = adamw(1e-3)
+    st = opt.init({"a": params["a"]})
+    path = str(tmp_path / "ck.npz")
+    checkpoint.save(path, {"params": params, "opt": st}, metadata={"step": 7})
+    template = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+        {"params": params, "opt": st})
+    out = checkpoint.restore(path, template)
+    np.testing.assert_array_equal(np.asarray(out["params"]["a"]["w"]),
+                                  np.arange(6.0).reshape(2, 3))
+    assert out["params"]["b"][1].dtype == jnp.int32
+    assert type(out["opt"]).__name__ == "AdamWState"
+    assert checkpoint.load_metadata(path)["step"] == 7
+
+
+def test_restore_into_different_dtype_fails_loudly(tmp_path):
+    path = str(tmp_path / "ck.npz")
+    checkpoint.save(path, {"w": jnp.ones((2, 2))})
+    bad = {"w": jax.ShapeDtypeStruct((3, 3), jnp.float32)}
+    try:
+        checkpoint.restore(path, bad)
+        raise RuntimeError("should have failed")
+    except AssertionError:
+        pass

@@ -1,0 +1,119 @@
+"""Per-architecture smoke tests: reduced variant of the same family
+(2 layers, d_model <= 512, <= 4 experts) — one forward/train step on CPU,
+asserting output shapes and no NaNs; plus a decode step where applicable."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs import ARCHS, SHAPES
+from repro.configs.specs import input_specs
+from repro.models import transformer
+from repro.models.frontends import AUDIO_EMBED_DIM, VISION_EMBED_DIM
+from repro.optim import adamw
+from repro.train.loop import make_lm_train_step
+
+LM_ARCHS = [a for a in ARCHS if a != "hydragnn-gfm"]
+
+
+def _materialize(spec_tree, seed=0):
+    rng = np.random.default_rng(seed)
+
+    def mk(s):
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            return jnp.asarray(rng.integers(0, 16, s.shape), s.dtype)
+        return jnp.asarray(rng.normal(0, 1, s.shape), s.dtype)
+
+    return jax.tree_util.tree_map(mk, spec_tree)
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_reduced_limits(arch):
+    cfg = configs.get_smoke(arch)
+    assert cfg.n_layers <= 8 and cfg.d_model <= 512
+    assert cfg.n_experts <= 4
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_forward_and_train_step(arch):
+    cfg = configs.get_smoke(arch)
+    shape = SHAPES["train_4k"]
+    batch = _materialize(input_specs(cfg, shape, mesh=None, reduced=True))
+    params = transformer.lm_init(jax.random.PRNGKey(0), cfg)
+
+    # forward: logits shape + finite
+    memory = None
+    if cfg.n_enc_layers:
+        memory = transformer.encode(params, batch["src_embed"], cfg)
+        assert memory.shape == (batch["src_embed"].shape[0], 32, cfg.d_model)
+    logits, _, aux = transformer.lm_apply(params, batch["tokens"], cfg=cfg,
+                                          media=batch.get("media"),
+                                          memory=memory)
+    B, S = batch["tokens"].shape
+    n_media = batch["media"].shape[1] if "media" in batch else 0
+    assert logits.shape == (B, S + n_media, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits).all()), "NaN/Inf in logits"
+
+    # one train step
+    opt = adamw(1e-3)
+    opt_state = opt.init(params)
+    step = jax.jit(make_lm_train_step(cfg, opt))
+    params2, _, loss = step(params, opt_state, batch)
+    assert bool(jnp.isfinite(loss)), "NaN loss"
+    # params actually changed
+    d = jax.tree_util.tree_map(lambda a, b: float(jnp.abs(a - b).max()),
+                               params, params2)
+    assert max(jax.tree_util.tree_leaves(d)) > 0
+
+
+@pytest.mark.parametrize("arch", [a for a in LM_ARCHS
+                                  if configs.get(a).supports_decode])
+def test_decode_step(arch):
+    cfg = configs.get_smoke(arch)
+    B, C = 2, 64
+    params = transformer.lm_init(jax.random.PRNGKey(0), cfg)
+    caches = transformer.lm_cache_init(params, cfg, B, C)
+    memory = (jnp.zeros((B, 32, cfg.d_model), cfg.compute_dtype)
+              if cfg.n_enc_layers else None)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    logits, caches2, _ = transformer.lm_apply(
+        params, tok, cfg=cfg, mode="decode", caches=caches,
+        positions=jnp.array([0]), memory=memory)
+    assert logits.shape == (B, 1, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_gfm_smoke():
+    from repro.core import make_gfm_mtl
+    from repro.data.synthetic_atoms import generate_all, to_batch_dict
+    cfg = configs.get_smoke("hydragnn-gfm")
+    model = make_gfm_mtl(cfg, cfg.n_tasks)
+    params = model.init(jax.random.PRNGKey(0))
+    data = generate_all(8, max_atoms=cfg.max_atoms, max_edges=cfg.max_edges,
+                        sources=["ani1x", "qm7x", "mptrj"])
+    bs = [to_batch_dict(sd, np.arange(4)) for sd in data.values()]
+    batch = {k: jnp.stack([b[k] for b in bs]) for k in bs[0]}
+    per_task, metrics = model.loss_fn(params["shared"], params["heads"], batch)
+    assert per_task.shape == (cfg.n_tasks,)
+    assert bool(jnp.isfinite(per_task).all())
+
+
+def test_exact_assigned_configs():
+    """The full configs carry the exact assigned hyperparameters."""
+    c = configs.get("granite-moe-3b-a800m")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.vocab,
+            c.n_experts, c.top_k) == (32, 1536, 24, 8, 49155, 40, 8)
+    c = configs.get("deepseek-v2-236b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.kv_lora, c.n_experts,
+            c.top_k, c.vocab) == (60, 5120, 128, 512, 160, 6, 102400)
+    c = configs.get("gemma3-12b")
+    assert (c.n_layers, c.d_model, c.vocab, c.block_pattern.count("swa")) == \
+        (48, 3840, 262144, 5)
+    c = configs.get("zamba2-1.2b")
+    assert (c.n_layers, c.d_model, c.ssm_state) == (38, 2048, 64)
+    c = configs.get("xlstm-125m")
+    assert (c.n_layers, c.d_model, c.n_heads, c.d_ff) == (12, 768, 4, 0)
+    c = configs.get("hydragnn-gfm")
+    assert (c.gnn_layers, c.gnn_hidden, c.head_hidden, c.head_layers,
+            c.n_tasks) == (4, 866, 889, 3, 5)

@@ -1,0 +1,81 @@
+"""The loop-aware HLO analyzer: exact on known programs, and strictly more
+complete than XLA's cost_analysis on loops."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_analysis import analyze_hlo
+
+
+def _compile(f, *specs):
+    return jax.jit(f).lower(*specs).compile()
+
+
+def test_flat_matmul():
+    M = K = N = 128
+    c = _compile(lambda a, b: a @ b,
+                 jax.ShapeDtypeStruct((M, K), jnp.float32),
+                 jax.ShapeDtypeStruct((K, N), jnp.float32))
+    r = analyze_hlo(c.as_text())
+    assert r["flops"] == 2 * M * N * K
+
+
+def test_scan_multiplies_trip_count():
+    M = K = 64
+    def g(a, ws):
+        def body(x, w):
+            return jnp.tanh(x @ w), ()
+        y, _ = jax.lax.scan(body, a, ws)
+        return y
+    c = _compile(g, jax.ShapeDtypeStruct((M, K), jnp.float32),
+                 jax.ShapeDtypeStruct((10, K, K), jnp.float32))
+    r = analyze_hlo(c.as_text())
+    assert r["flops"] == 10 * 2 * M * K * K
+    assert float(c.cost_analysis()["flops"]) < r["flops"]  # XLA undercounts
+
+
+def test_nested_scan():
+    M = K = 32
+    def h(a, ws):
+        def outer(x, w):
+            def inner(y, _):
+                return jnp.tanh(y @ w), ()
+            y, _ = jax.lax.scan(inner, x, None, length=5)
+            return y, ()
+        y, _ = jax.lax.scan(outer, a, ws)
+        return y
+    c = _compile(h, jax.ShapeDtypeStruct((M, K), jnp.float32),
+                 jax.ShapeDtypeStruct((4, K, K), jnp.float32))
+    r = analyze_hlo(c.as_text())
+    assert r["flops"] == 4 * 5 * 2 * M * K * K
+
+
+def test_traffic_scales_with_trip_count():
+    K = 64
+    def g(a, ws):
+        def body(x, w):
+            return jnp.tanh(x @ w), ()
+        y, _ = jax.lax.scan(body, a, ws)
+        return y
+    specs = lambda n: (jax.ShapeDtypeStruct((K, K), jnp.float32),
+                       jax.ShapeDtypeStruct((n, K, K), jnp.float32))
+    t2 = analyze_hlo(_compile(g, *specs(2)).as_text())["traffic_bytes"]
+    t8 = analyze_hlo(_compile(g, *specs(8)).as_text())["traffic_bytes"]
+    assert 2.5 < t8 / t2 < 4.5  # ~4x body traffic, constant overhead
+
+
+def test_remat_recompute_is_counted():
+    K = 64
+    def f(a, w):
+        return jnp.sum(jax.checkpoint(lambda x: jnp.tanh(x @ w) @ w)(a))
+    g = jax.grad(f)
+    c = _compile(g, jax.ShapeDtypeStruct((K, K), jnp.float32),
+                 jax.ShapeDtypeStruct((K, K), jnp.float32))
+    r = analyze_hlo(c.as_text())
+    # XLA CSEs the checkpoint recompute at this scale; the invariant that
+    # matters is that backward dots are counted and the analyzer is at least
+    # as complete as XLA's own accounting.
+    assert r["flops"] >= 3 * 2 * K ** 3
+    # within ~2% of XLA's own count on a loop-free graph (XLA additionally
+    # counts a few elementwise transcendental fusions as flops)
+    assert r["flops"] >= float(c.cost_analysis()["flops"]) * 0.95

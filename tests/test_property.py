@@ -1,0 +1,96 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer
+from repro.models.attention import sdpa_chunked, sdpa_naive
+from repro.models.common import apply_rope, rmsnorm, rmsnorm_init
+
+
+@settings(max_examples=15, deadline=None)
+@given(S=st.integers(4, 48), hd=st.sampled_from([8, 16, 32]),
+       seed=st.integers(0, 999))
+def test_rope_preserves_norm_and_relativity(S, hd, seed):
+    """RoPE is an orthogonal transform; scores depend on relative offset."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (1, S, 2, hd))
+    pos = jnp.arange(S)
+    y = apply_rope(x, pos)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               rtol=1e-4)
+    # shifting all positions by a constant leaves q.k scores unchanged
+    q = jax.random.normal(key, (1, 1, 2, hd))
+    k = jax.random.normal(jax.random.PRNGKey(seed + 1), (1, 1, 2, hd))
+    def score(off):
+        qq = apply_rope(q, pos[:1] + off)
+        kk = apply_rope(k, pos[:1] + off)
+        return np.asarray(jnp.einsum("bshd,bshd->bsh", qq, kk))
+    np.testing.assert_allclose(score(0), score(17), rtol=1e-3, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(S=st.integers(8, 64), seed=st.integers(0, 999))
+def test_attention_causality(S, seed):
+    """Perturbing future tokens never changes past outputs."""
+    key = jax.random.PRNGKey(seed)
+    q = jax.random.normal(key, (1, S, 2, 16))
+    k = jax.random.normal(jax.random.PRNGKey(seed + 1), (1, S, 2, 16))
+    v = jax.random.normal(jax.random.PRNGKey(seed + 2), (1, S, 2, 16))
+    pos = jnp.arange(S)
+    o1 = sdpa_naive(q, k, v, q_pos=pos, k_pos=pos, causal=True)
+    t = S // 2
+    k2 = k.at[:, t:].add(100.0)
+    v2 = v.at[:, t:].add(-50.0)
+    o2 = sdpa_naive(q, k2, v2, q_pos=pos, k_pos=pos, causal=True)
+    np.testing.assert_allclose(np.asarray(o1[:, :t]), np.asarray(o2[:, :t]),
+                               atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(S=st.integers(5, 80), qc=st.sampled_from([4, 8, 16]),
+       kc=st.sampled_from([4, 8, 16]), seed=st.integers(0, 999))
+def test_chunked_equals_naive(S, qc, kc, seed):
+    """Blocked online-softmax == full softmax for any chunking."""
+    key = jax.random.PRNGKey(seed)
+    q = jax.random.normal(key, (1, S, 4, 8))
+    k = jax.random.normal(jax.random.PRNGKey(seed + 1), (1, S, 2, 8))
+    v = jax.random.normal(jax.random.PRNGKey(seed + 2), (1, S, 2, 8))
+    pos = jnp.arange(S)
+    o1 = sdpa_naive(q, k, v, q_pos=pos, k_pos=pos, causal=True)
+    o2 = sdpa_chunked(q, k, v, q_pos=pos, k_pos=pos, causal=True,
+                      q_chunk=qc, k_chunk=kc)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5,
+                               rtol=2e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(d=st.sampled_from([8, 32, 128]), scale=st.floats(0.1, 100.0),
+       seed=st.integers(0, 999))
+def test_rmsnorm_scale_invariance(d, scale, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (3, d))
+    p = rmsnorm_init(d)
+    y1 = rmsnorm(p, x)
+    y2 = rmsnorm(p, x * scale)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-3,
+                               rtol=1e-3)
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 99))
+def test_lm_causality_end_to_end(seed):
+    """Changing token t only affects logits at positions >= t."""
+    cfg = ArchConfig(name="t", n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+                     d_ff=64, vocab=50, remat=False,
+                     compute_dtype=jnp.float32)
+    params = transformer.lm_init(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(seed), (1, 12), 0, 50)
+    l1, _, _ = transformer.lm_apply(params, toks, cfg=cfg)
+    toks2 = toks.at[0, 6].set((toks[0, 6] + 1) % 50)
+    l2, _, _ = transformer.lm_apply(params, toks2, cfg=cfg)
+    np.testing.assert_allclose(np.asarray(l1[:, :6]), np.asarray(l2[:, :6]),
+                               atol=1e-4)
+    assert float(jnp.abs(l1[:, 6:] - l2[:, 6:]).max()) > 1e-4

@@ -1,0 +1,150 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The paper's central empirical claims (Tables 1-2, at reduced scale):
+  1. GFM-MTL (per-source heads) trains stably on conflicting multi-fidelity
+     labels and reaches low error on EVERY source;
+  2. GFM-Baseline (one shared head on mixed data) plateaus higher — it cannot
+     fit per-source label offsets;
+  3. training runs end-to-end through the MTP train step + group batcher.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.core import MTPConfig, make_gfm_mtl, make_mtp_train_step
+from repro.data.loader import GroupBatcher
+from repro.data.synthetic_atoms import generate_all
+from repro.optim import adamw
+
+SOURCES3 = ["ani1x", "qm7x", "mptrj"]
+
+
+def _cfg():
+    return ArchConfig(name="gfm-e2e", family="gnn", gnn_hidden=48,
+                      gnn_layers=2, n_species=64, head_hidden=32,
+                      head_layers=2, remat=False, compute_dtype=jnp.float32)
+
+
+def _sources(n=96, seed=0):
+    data = generate_all(n, max_atoms=12, max_edges=64, seed=seed,
+                        sources=SOURCES3)
+    out = []
+    for sd in data.values():
+        # paper SS4: align energies before pre-training (here: per-source
+        # standardisation — removes the large fidelity offsets that would
+        # otherwise dominate the early loss and make short CPU runs flaky
+        # under XLA reduction-order nondeterminism)
+        e = (sd.energy - sd.energy.mean()) / max(sd.energy.std(), 1e-6)
+        f = sd.forces / max(np.abs(sd.forces).std(), 1e-6)
+        out.append(dict(species=sd.species, pos=sd.pos, edge_src=sd.edge_src,
+                        edge_dst=sd.edge_dst, node_mask=sd.node_mask,
+                        edge_mask=sd.edge_mask, energy=e.astype(np.float32),
+                        forces=f.astype(np.float32)))
+    return out
+
+
+def _train(model, n_tasks, sources, steps=300, batch=16, seed=0):
+    params = model.init(jax.random.PRNGKey(seed))
+    opt = adamw(3e-3, grad_clip=1.0)
+    st = opt.init(params)
+    step = make_mtp_train_step(model, opt, MTPConfig(n_tasks=n_tasks))
+    gb = GroupBatcher(sources, batch, seed=seed)
+    losses = []
+    for _ in range(steps):
+        params, st, l, _ = step(params, st, gb.next_batch())
+        losses.append(float(l))
+    return params, losses
+
+
+def _probe_batch(sources):
+    return {k: jnp.stack([jnp.asarray(s[k][:32]) for s in sources])
+            for k in sources[0]}
+
+
+@pytest.fixture(scope="module")
+def mtl_run():
+    cfg = _cfg()
+    model = make_gfm_mtl(cfg, 3)
+    sources = _sources()
+    probe = _probe_batch(sources)
+    p0 = model.init(jax.random.PRNGKey(0))
+    loss0 = float(jnp.mean(model.loss_fn(p0["shared"], p0["heads"], probe)[0]))
+    params, losses = _train(model, 3, sources)
+    return cfg, model, sources, params, losses, loss0
+
+
+def test_training_is_stable(mtl_run):
+    cfg, model, sources, params, losses, loss0 = mtl_run
+    assert all(np.isfinite(losses)), "training diverged"
+    # fixed probe batch (per-batch losses are noisy across heterogeneous
+    # structures; the paper's convergence claim is about the trend)
+    probe = _probe_batch(sources)
+    loss1 = float(jnp.mean(model.loss_fn(params["shared"], params["heads"],
+                                         probe)[0]))
+    assert loss1 < 0.5 * loss0, f"probe loss {loss0:.3f} -> {loss1:.3f}"
+
+
+def test_mtl_fits_all_sources(mtl_run):
+    cfg, model, sources, params, _, _ = mtl_run
+    per_task, _ = model.loss_fn(
+        params["shared"], params["heads"],
+        {k: jnp.stack([jnp.asarray(s[k][:32]) for s in sources])
+         for k in sources[0]})
+    assert bool((per_task < np.inf).all())
+    # every head reaches a comparable (low) loss despite conflicting labels
+    pt = np.asarray(per_task)
+    assert pt.max() < 10 * max(pt.min(), 1e-3)
+
+
+def test_mtl_beats_single_head_baseline(mtl_run):
+    """Paper Tables 1-2 phenomenology: per-source heads beat one shared head
+    on the same mixed multi-fidelity data."""
+    cfg, _, sources, mtl_params, mtl_losses, _ = mtl_run
+    # baseline: one head processes all sources mixed together (n_tasks=1)
+    mixed = {k: np.concatenate([s[k] for s in sources]) for k in sources[0]}
+    base_model = make_gfm_mtl(cfg, 1)
+    _, base_losses = _train(base_model, 1, [mixed])
+    # compare energy fit quality at convergence
+    assert np.mean(mtl_losses[-10:]) < np.mean(base_losses[-10:]), (
+        f"MTL {np.mean(mtl_losses[-10:]):.4f} !< "
+        f"baseline {np.mean(base_losses[-10:]):.4f}")
+
+
+def test_lm_multitask_end_to_end():
+    """The paper's technique on an LLM trunk: shared transformer + per-source
+    LM heads, one train step, finite loss, head grads flow."""
+    from repro.core import make_lm_multitask
+    from repro.data.lm_data import make_lm_sources
+    cfg = ArchConfig(name="lm-mt", n_layers=2, d_model=32, n_heads=2,
+                     n_kv_heads=2, d_ff=64, vocab=128, n_tasks=3,
+                     remat=False, compute_dtype=jnp.float32)
+    model = make_lm_multitask(cfg)
+    sources = make_lm_sources(3, n_seqs=8, seq_len=16, vocab=128)
+    gb = GroupBatcher(sources, 4)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = adamw(1e-3)
+    st = opt.init(params)
+    step = make_mtp_train_step(model, opt, MTPConfig(n_tasks=3))
+    p0 = jax.tree_util.tree_map(lambda x: x.copy(), params)
+    for _ in range(3):
+        params, st, l, m = step(params, st, gb.next_batch())
+        assert np.isfinite(float(l))
+    dh = jax.tree_util.tree_map(lambda a, b: float(jnp.abs(a - b).max()),
+                                p0["heads"], params["heads"])
+    assert max(jax.tree_util.tree_leaves(dh)) > 0, "head params unchanged"
+
+
+def test_uncertainty_weighted_mtl_trains():
+    """Kendall uncertainty weighting: log-sigma2 leaves live with the heads
+    (task-shardable) and adapt during training."""
+    cfg = _cfg()
+    model = make_gfm_mtl(cfg, 3, uncertainty=True)
+    sources = _sources(n=48)
+    params, losses = _train(model, 3, sources, steps=40)
+    assert "log_sigma2" in params["heads"]
+    assert params["heads"]["log_sigma2"].shape == (3, 2)
+    s = np.asarray(params["heads"]["log_sigma2"])
+    assert np.isfinite(losses[-1]) and (np.abs(s) > 1e-4).any(), \
+        "uncertainty weights did not adapt"

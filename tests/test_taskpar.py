@@ -1,0 +1,108 @@
+"""Multi-task parallelism: pjit sharding path == explicit shard_map psum path
+== single-device reference. Needs >1 device, so runs in a subprocess with
+8 host devices (the main pytest process keeps 1 device)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax, jax.numpy as jnp
+    from repro.configs.base import ArchConfig
+    from repro.core import (MTPConfig, make_gfm_mtl, mtp_value_and_grad_shardmap,
+                            param_shardings, batch_shardings, memory_per_device)
+    from repro.data.synthetic_atoms import generate_all, to_batch_dict
+    import numpy as np
+
+    cfg = ArchConfig(name="g", family="gnn", gnn_hidden=24, gnn_layers=2,
+                     n_species=64, head_hidden=12, head_layers=2, remat=False,
+                     compute_dtype=jnp.float32)
+    T = 4
+    model = make_gfm_mtl(cfg, T)
+    params = model.init(jax.random.PRNGKey(0))
+    data = generate_all(8, max_atoms=10, max_edges=40,
+                        sources=["ani1x", "qm7x", "mptrj", "alexandria"])
+    bs = [to_batch_dict(sd, np.arange(8)) for sd in data.values()]
+    batch = {k: jnp.stack([b[k] for b in bs]) for k in bs[0]}
+
+    def ref_loss(p):
+        pt, _ = model.loss_fn(p["shared"], p["heads"], batch)
+        return jnp.mean(pt)
+
+    l_ref, g_ref = jax.value_and_grad(ref_loss)(params)
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mtp = MTPConfig(n_tasks=T, mode="par")
+
+    # shard_map explicit-collective path
+    f = mtp_value_and_grad_shardmap(model, mesh, mtp)
+    l_sm, g_sm = jax.jit(f)(params, batch)
+
+    # pjit path
+    ps = param_shardings(mesh, params, mtp)
+    bsh = batch_shardings(mesh, batch, mtp)
+    params_s = jax.device_put(params, ps)
+    batch_s = jax.device_put(batch, bsh)
+    l_pj, g_pj = jax.jit(jax.value_and_grad(ref_loss))(params_s)
+
+    def maxerr(a, b):
+        e = jax.tree_util.tree_map(lambda x, y: float(jnp.abs(x - y).max()), a, b)
+        return max(jax.tree_util.tree_leaves(e))
+
+    # head sharding really is task-sharded on the model axis
+    hshard = jax.tree_util.tree_leaves(ps["heads"])[0]
+    out = dict(
+        l_ref=float(l_ref), l_sm=float(l_sm), l_pj=float(l_pj),
+        g_err_sm=maxerr(g_ref, g_sm), g_err_pj=maxerr(g_ref, g_pj),
+        head_spec=str(hshard.spec),
+        mem_par=memory_per_device(100, 10, T, "par"),
+        mem_base=memory_per_device(100, 10, T, "base"),
+    )
+    print("RESULT " + json.dumps(out))
+""")
+
+
+@pytest.fixture(scope="module")
+def result():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=300)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")][0]
+    return json.loads(line[len("RESULT "):])
+
+
+def test_losses_agree(result):
+    # shard_map reproduces the paper's per-process DDP loss averaging: the
+    # force-MSE normalizes by each shard's OWN atom count, so the mean of
+    # per-shard ratios differs from the global ratio by O(batch variance) —
+    # a property of real DDP, not an error. Grads agree to 5e-3 below.
+    # O(10%) spread between the two estimators at local batch 8 is expected;
+    # the GRADIENTS are the contract and match to 5e-3 (next test).
+    np.testing.assert_allclose(result["l_sm"], result["l_ref"], rtol=0.15)
+    np.testing.assert_allclose(result["l_pj"], result["l_ref"], rtol=1e-5)
+
+
+def test_grads_agree(result):
+    assert result["g_err_pj"] < 1e-5, "pjit grads != reference"
+    assert result["g_err_sm"] < 5e-3, "shard_map grads != reference"
+
+
+def test_heads_sharded_on_task_axis(result):
+    assert "model" in result["head_spec"]
+
+
+def test_memory_model(result):
+    # paper section 4.3: P_s + P_h vs P_s + N_h * P_h
+    assert result["mem_par"] == 110
+    assert result["mem_base"] == 140
