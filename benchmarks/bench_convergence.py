@@ -19,16 +19,13 @@ import time
 import numpy as np
 
 import jax
-import jax.numpy as jnp
 
 
 def run(n_samples=192, steps=250, batch=16, hidden=48, seed=0, verbose=False):
     from repro.configs import get_smoke
-    from repro.core import MTPConfig, gfm_eval_fn, make_gfm_mtl, \
-        make_mtp_train_step
-    from repro.data.loader import GroupBatcher
+    from repro.core import gfm_eval_fn
     from repro.data.synthetic_atoms import SOURCES, generate_all, to_batch_dict
-    from repro.optim import adamw
+    from repro.engine import Session, SessionConfig
 
     names = list(SOURCES)
     cfg = get_smoke("hydragnn-gfm").replace(gnn_hidden=hidden, head_hidden=32,
@@ -45,16 +42,12 @@ def run(n_samples=192, steps=250, batch=16, hidden=48, seed=0, verbose=False):
             for k, s in data.items()}
     ev = gfm_eval_fn(cfg)
 
-    def train_model(n_tasks, sources, seed=0, steps=steps):
-        model = make_gfm_mtl(cfg, n_tasks)
-        params = model.init(jax.random.PRNGKey(seed))
-        opt = adamw(3e-3)
-        st = opt.init(params)
-        step = make_mtp_train_step(model, opt, MTPConfig(n_tasks=n_tasks))
-        gb = GroupBatcher(sources, batch, seed=seed)
-        for _ in range(steps):
-            params, st, loss, _ = step(params, st, gb.next_batch())
-        return params
+    def train_model(sources, seed=0, steps=steps):
+        # task count == len(sources) (Session derives it)
+        scfg = SessionConfig(model="gfm-mtl", arch=cfg, steps=steps,
+                             batch_per_task=batch, lr=3e-3, seed=seed,
+                             log_every=max(steps // 4, 1), verbose=False)
+        return Session.from_config(scfg, sources=sources).run().params
 
     results = {"energy": {}, "force": {}}
 
@@ -71,16 +64,16 @@ def run(n_samples=192, steps=250, batch=16, hidden=48, seed=0, verbose=False):
     t0 = time.time()
     # 5 single-source models
     for t, k in enumerate(names):
-        p = train_model(1, [train[t]], seed=t)
+        p = train_model([train[t]], seed=t)
         evaluate(f"Model-{k}", p["shared"],
                  jax.tree_util.tree_map(lambda x: x[0], p["heads"]))
     # GFM-Baseline-All: one branch, mixed data
     mixed = {kk: np.concatenate([s[kk] for s in train]) for kk in train[0]}
-    p = train_model(1, [mixed], seed=7)
+    p = train_model([mixed], seed=7)
     evaluate("GFM-Baseline-All", p["shared"],
              jax.tree_util.tree_map(lambda x: x[0], p["heads"]))
     # GFM-MTL-All: the paper's model (per-source heads; evaluated per head)
-    p = train_model(5, train, seed=9)
+    p = train_model(train, seed=9)
     e_row, f_row = {}, {}
     for t, k in enumerate(names):
         head_t = jax.tree_util.tree_map(lambda x: x[t], p["heads"])

@@ -29,10 +29,9 @@ import jax.numpy as jnp
 from jax.sharding import Mesh
 
 from repro.configs import get_smoke
-from repro.core import (MTPConfig, make_gfm_mtl, make_mtp_train_step,
-                        param_shardings, batch_shardings)
-from repro.core.taskpar import AdamLike_shardings
+from repro.core import MTPConfig, make_gfm_mtl
 from repro.data.synthetic_atoms import generate_all, to_batch_dict
+from repro.engine import ShardingPlan, TrainState, make_step
 from repro.launch.hlo_analysis import analyze_hlo
 from repro.optim import adamw
 
@@ -55,12 +54,8 @@ def lower_gfm(dp: int, mode: str, batch_per_task: int, cfg):
     model = make_gfm_mtl(cfg, N_TASKS)
     mtp = MTPConfig(n_tasks=N_TASKS, mode=mode)
     opt = adamw(1e-3)
-    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
-    p_shapes = jax.eval_shape(model.init, key)
-    p_shard = param_shardings(mesh, p_shapes, mtp)
-    p_sds = _sds(p_shapes, p_shard)
-    o_shapes = jax.eval_shape(opt.init, p_shapes)
-    o_sds = _sds(o_shapes, AdamLike_shardings(o_shapes, p_shard))
+    plan = ShardingPlan(mesh=mesh, mtp=mtp)
+    state_sds = plan.state_template(model.init, opt)
     T, B, A, E = N_TASKS, batch_per_task, cfg.max_atoms, cfg.max_edges
     bshapes = {
         "species": jax.ShapeDtypeStruct((T, B, A), jnp.int32),
@@ -72,20 +67,17 @@ def lower_gfm(dp: int, mode: str, batch_per_task: int, cfg):
         "energy": jax.ShapeDtypeStruct((T, B), jnp.float32),
         "forces": jax.ShapeDtypeStruct((T, B, A, 3), jnp.float32),
     }
-    b_sds = _sds(bshapes, batch_shardings(mesh, bshapes, mtp))
-    step = make_mtp_train_step(model, opt, mtp)
-    lowered = jax.jit(step, donate_argnums=(0, 1)).lower(p_sds, o_sds, b_sds)
-    compiled = lowered.compile()
+    b_sds = _sds(bshapes, plan.data_batch_shardings(bshapes))
+    step = make_step(model, opt, plan)
+    compiled = plan.compile(step).lower(state_sds, b_sds).compile()
     h = analyze_hlo(compiled.as_text())
-    # resident param bytes/device from shardings
-    def shard_bytes(shapes, shards):
+    # resident param bytes/device from the plan's own shardings
+    def shard_bytes(sds_tree):
         tot = 0
-        for s, sh in zip(jax.tree_util.tree_leaves(shapes),
-                         jax.tree_util.tree_leaves(shards)):
+        for s in jax.tree_util.tree_leaves(sds_tree):
             n = int(np.prod(s.shape)) * s.dtype.itemsize
-            spec = sh.spec
             denom = 1
-            for dim, entry in zip(s.shape, spec):
+            for dim, entry in zip(s.shape, s.sharding.spec):
                 if entry is None:
                     continue
                 axes = entry if isinstance(entry, tuple) else (entry,)
@@ -93,7 +85,7 @@ def lower_gfm(dp: int, mode: str, batch_per_task: int, cfg):
                     denom *= dict(zip(("data", "model"), (dp, N_TASKS)))[a]
             tot += n // max(denom, 1)
         return tot
-    pb = shard_bytes(p_shapes, p_shard)
+    pb = shard_bytes(state_sds.params)
     return {"devices": dp * N_TASKS, "mode": mode, "batch_per_task": batch_per_task,
             "coll_bytes_dev": h["collective_bytes"], "flops_dev": h["flops"],
             "param_bytes_dev": pb,
@@ -128,20 +120,17 @@ def measured_8dev(cfg, steps=12):
         for mode in ("par", "base"):
             mtp = MTPConfig(n_tasks=4, mode=mode)
             opt = adamw(1e-3)
-            params = model.init(jax.random.PRNGKey(0))
-            st = opt.init(params)
-            ps = param_shardings(mesh, params, mtp)
-            params = jax.device_put(params, ps)
-            st = jax.device_put(st, AdamLike_shardings(st, ps))
-            bsh = batch_shardings(mesh, batch, mtp)
-            b = jax.device_put(batch, bsh)
-            step = jax.jit(make_mtp_train_step(model, opt, mtp))
-            params, st, l, _ = step(params, st, b)  # compile+warm
-            jax.block_until_ready(l)
+            plan = ShardingPlan(mesh=mesh, mtp=mtp, donate=False)
+            step = plan.compile(make_step(model, opt, plan))
+            state = plan.shard_state(
+                TrainState.create(model.init(jax.random.PRNGKey(0)), opt))
+            b = plan.shard_batch(batch)
+            state, o = step(state, b)  # compile+warm
+            jax.block_until_ready(o.loss)
             t0 = time.time()
             for _ in range(steps):
-                params, st, l, _ = step(params, st, b)
-            jax.block_until_ready(l)
+                state, o = step(state, b)
+            jax.block_until_ready(o.loss)
             out[mode] = (time.time() - t0) / steps
         return out
     finally:

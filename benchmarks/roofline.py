@@ -68,6 +68,8 @@ def bottleneck_row(entry: dict) -> dict | None:
     if entry.get("status") != "ok" or "hlo" not in entry:
         return None
     h = entry["hlo"]
+    if "flops" not in h:   # --no-compile entries carry only a skip marker
+        return None
     ct = h["flops"] / PEAK_FLOPS_BF16
     mt = h["traffic_bytes"] / HBM_BW
     lt = h["collective_bytes"] / ICI_BW

@@ -1,23 +1,24 @@
 """Downstream fine-tuning — the paper's raison d'être for pre-training.
 
-Pre-trains the two-level MTL GFM on 3 sources, then adapts to an UNSEEN
-high-fidelity downstream source (CCSD-like: same ground truth, different
-offsets, little data) by attaching a FRESH branch to the frozen shared
-encoder — and compares against training an identical model from scratch on
-the downstream data alone. The pre-trained encoder should dominate in the
-low-data regime ("drastic reduction of data volume ... for task-specific
-fine-tuning", paper §1).
+Pre-trains the two-level MTL GFM on 3 sources through an engine ``Session``,
+then adapts to an UNSEEN high-fidelity downstream source (CCSD-like: same
+ground truth, different offsets, little data) by attaching a FRESH branch to
+the shared encoder — and compares against training an identical model from
+scratch on the downstream data alone. The pre-trained encoder should
+dominate in the low-data regime ("drastic reduction of data volume ... for
+task-specific fine-tuning", paper §1).
 
   PYTHONPATH=src python examples/finetune_downstream.py
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_smoke
-from repro.core import MTPConfig, gfm_eval_fn, make_gfm_mtl, make_mtp_train_step
-from repro.data.loader import GroupBatcher
+from repro.core import gfm_eval_fn
+from repro.core.mtl import gfm_loss_terms
 from repro.data.synthetic_atoms import generate_all, generate_source, to_batch_dict
+from repro.engine import (Session, SessionConfig, ShardingPlan,
+                          SingleTaskModel, TrainState, make_step)
 from repro.models import gnn, heads
 from repro.optim import adamw
 
@@ -27,22 +28,18 @@ STEPS_PT, STEPS_FT = 400, 200
 
 cfg = get_smoke("hydragnn-gfm").replace(gnn_hidden=64, head_hidden=48)
 
-# ---- pre-train on 3 sources ------------------------------------------------
-model = make_gfm_mtl(cfg, len(PRETRAIN_SOURCES))
+# ---- pre-train on 3 sources (one Session) ---------------------------------
 data = generate_all(192, max_atoms=cfg.max_atoms, max_edges=cfg.max_edges,
                     sources=PRETRAIN_SOURCES)
 train = [dict(species=s.species, pos=s.pos, edge_src=s.edge_src,
               edge_dst=s.edge_dst, node_mask=s.node_mask,
               edge_mask=s.edge_mask, energy=s.energy, forces=s.forces)
          for s in data.values()]
-params = model.init(jax.random.PRNGKey(0))
-opt = adamw(3e-3)
-st = opt.init(params)
-step = make_mtp_train_step(model, opt, MTPConfig(n_tasks=3))
-gb = GroupBatcher(train, 16)
-for i in range(STEPS_PT):
-    params, st, loss, _ = step(params, st, gb.next_batch())
-print(f"pre-trained on {PRETRAIN_SOURCES}: final loss {float(loss):.4f}")
+result = Session.from_config(
+    SessionConfig(model="gfm-mtl", arch=cfg, steps=STEPS_PT,
+                  batch_per_task=16, lr=3e-3, log_every=100, verbose=False),
+    sources=train, task_names=PRETRAIN_SOURCES).run()
+print(f"pre-trained on {PRETRAIN_SOURCES}: final loss {result.final_loss:.4f}")
 
 # ---- downstream source (unseen fidelity, tiny dataset) ---------------------
 ds = generate_source("transition1x", N_DOWNSTREAM + 64,
@@ -52,34 +49,34 @@ ds_test = to_batch_dict(ds, np.arange(N_DOWNSTREAM, N_DOWNSTREAM + 64))
 ev = gfm_eval_fn(cfg)
 
 
-def finetune(shared, steps=STEPS_FT, lr=3e-3, train_encoder=False, seed=1):
-    """Fresh branch on a given encoder; optionally tune the encoder too."""
-    branch = heads.branch_init(jax.random.PRNGKey(seed), cfg)
-    fopt = adamw(lr)
-    fparams = {"branch": branch} | ({"shared": shared} if train_encoder else {})
-    fst = fopt.init(fparams)
+def finetune(shared, steps=STEPS_FT, lr=3e-3, seed=1):
+    """Fresh branch + encoder tuning on a given encoder init, expressed as a
+    SingleTaskModel through the same unified engine step."""
+    def init(key):
+        return {"branch": heads.branch_init(jax.random.PRNGKey(seed), cfg),
+                "shared": shared}
 
-    def loss_fn(fp):
-        sh = fp.get("shared", shared)
-        feats = gnn.egnn_apply(sh, ds_train, cfg=cfg)
-        e, f = heads.branch_apply(fp["branch"], feats, ds_train["node_mask"],
+    def loss_fn(fp, batch):
+        feats = gnn.egnn_apply(fp["shared"], batch, cfg=cfg)
+        e, f = heads.branch_apply(fp["branch"], feats, batch["node_mask"],
                                   cfg=cfg)
-        from repro.core.mtl import gfm_loss_terms
-        l, _, _ = gfm_loss_terms(e, f, ds_train)
+        l, _, _ = gfm_loss_terms(e, f, batch)
         return l
 
-    stp = jax.jit(lambda fp, fs: (lambda g: fopt.update(g, fs, fp))(
-        jax.grad(loss_fn)(fp)))
+    model = SingleTaskModel(init=init, loss_fn=loss_fn, name="gfm-finetune")
+    opt = adamw(lr)
+    plan = ShardingPlan()
+    step = plan.compile(make_step(model, opt, plan))
+    state = TrainState.create(model.init(None), opt)
     for _ in range(steps):
-        fparams, fst = stp(fparams, fst)
-    sh = fparams.get("shared", shared)
-    return ev(sh, fparams["branch"], ds_test)
+        state, _ = step(state, ds_train)
+    return ev(state.params["shared"], state.params["branch"], ds_test)
 
 
 # both paths tune the encoder; the only difference is its initialization
-e_ft, f_ft = finetune(params["shared"], train_encoder=True)
+e_ft, f_ft = finetune(result.params["shared"])
 scratch = gnn.egnn_init(jax.random.PRNGKey(7), cfg)
-e_sc, f_sc = finetune(scratch, train_encoder=True)          # from scratch
+e_sc, f_sc = finetune(scratch)                              # from scratch
 
 print(f"\ndownstream ({N_DOWNSTREAM} samples), held-out MAE:")
 print(f"  fine-tuned pre-trained encoder : E {float(e_ft):.4f}  F {float(f_ft):.4f}")

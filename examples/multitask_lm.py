@@ -1,6 +1,6 @@
 """The paper's technique carried onto an LLM: shared transformer trunk +
 per-source LM heads (task-shardable), trained on 4 synthetic corpora with
-different token statistics.
+different token statistics — one engine ``Session``.
 
 Demonstrates that per-source heads absorb per-corpus distribution shifts the
 same way the GFM's per-dataset branches absorb fidelity offsets: per-task
@@ -9,16 +9,12 @@ losses converge together even though the corpora conflict.
   PYTHONPATH=src python examples/multitask_lm.py --arch xlstm-125m
 """
 import argparse
-import json
 
-import jax
 import numpy as np
 
 from repro.configs import get_smoke
-from repro.core import MTPConfig, make_lm_multitask, make_mtp_train_step
 from repro.data.lm_data import make_lm_sources
-from repro.data.loader import GroupBatcher
-from repro.optim import adamw
+from repro.engine import Session, SessionConfig
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--arch", default="qwen1.5-0.5b")
@@ -29,23 +25,16 @@ ap.add_argument("--batch", type=int, default=8)
 args = ap.parse_args()
 
 cfg = get_smoke(args.arch).replace(n_tasks=args.tasks)
-model = make_lm_multitask(cfg)
 sources = make_lm_sources(args.tasks, n_seqs=128, seq_len=args.seq,
                           vocab=cfg.vocab)
-batcher = GroupBatcher(sources, args.batch)
 
-params = model.init(jax.random.PRNGKey(0))
-opt = adamw(2e-3)
-state = opt.init(params)
-step = make_mtp_train_step(model, opt, MTPConfig(n_tasks=args.tasks))
+session = Session.from_config(
+    SessionConfig(model="lm-mtl", arch=cfg, steps=args.steps,
+                  batch_per_task=args.batch, lr=2e-3, log_every=20),
+    sources=sources,
+    task_names=[f"corpus{t}" for t in range(args.tasks)])
+result = session.run()
 
-for i in range(args.steps):
-    params, state, loss, m = step(params, state, batcher.next_batch())
-    if i % 20 == 0 or i == args.steps - 1:
-        print(json.dumps({
-            "step": i, "loss": round(float(loss), 4),
-            "per_task": [round(float(x), 3) for x in m["per_task_loss"]]}))
-
-pt = np.asarray(m["per_task_loss"])
+pt = np.asarray(result.last_metrics["per_task_loss"])
 print(f"# spread across {args.tasks} conflicting corpora: "
       f"max/min = {pt.max() / pt.min():.2f} (heads absorb per-source shift)")

@@ -3,30 +3,26 @@
 The full-width paper model (4-layer EGNN x 866 hidden + 5 branches of
 3x889 FC heads) on the 5 synthetic multi-fidelity sources with energy
 alignment, early stopping, checkpointing — the paper's §5.1 protocol end to
-end. ~100M-parameter class via wider heads; reduce --width for a quick run.
+end, expressed as one engine ``Session``. ~100M-parameter class via wider
+heads; reduce --width for a quick run.
 
   PYTHONPATH=src python examples/pretrain_gfm.py --steps 300 --width 256
 """
 import argparse
-import json
 
-import jax
 import numpy as np
 
 from repro.configs import get
-from repro.core import MTPConfig, make_gfm_mtl, make_mtp_train_step
 from repro.core.balancing import align_sources
-from repro.data.loader import GroupBatcher
 from repro.data.synthetic_atoms import N_SPECIES, SOURCES, generate_all
-from repro.optim import adamw, warmup_cosine
-from repro.train import checkpoint
-from repro.train.loop import EarlyStopping, MetricLogger
+from repro.engine import Session, SessionConfig
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--steps", type=int, default=300)
 ap.add_argument("--width", type=int, default=866, help="EGNN hidden (paper: 866)")
 ap.add_argument("--samples", type=int, default=512)
 ap.add_argument("--batch", type=int, default=32)
+ap.add_argument("--accum", type=int, default=1, help="grad-accum microbatches")
 ap.add_argument("--ckpt", default="results/gfm_pretrained.npz")
 args = ap.parse_args()
 
@@ -34,11 +30,6 @@ cfg = get("hydragnn-gfm").replace(
     gnn_hidden=args.width, head_hidden=min(889, args.width + 23),
     max_atoms=24, max_edges=256, remat=False)
 names = list(SOURCES)
-model = make_gfm_mtl(cfg, n_tasks=len(names))
-params = model.init(jax.random.PRNGKey(0))
-n_params = sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
-print(f"# model: EGNN {cfg.gnn_layers}x{cfg.gnn_hidden} + "
-      f"{len(names)} branches -> {n_params/1e6:.1f}M params")
 
 data = generate_all(args.samples, max_atoms=cfg.max_atoms,
                     max_edges=cfg.max_edges)
@@ -55,23 +46,16 @@ for (k, s), al in zip(data.items(), aligned):
                         energy=al["energy"].astype(np.float32),
                         forces=s.forces))
 
-opt = adamw(warmup_cosine(1e-3, 30, args.steps), grad_clip=1.0)
-state = opt.init(params)
-step = make_mtp_train_step(model, opt, MTPConfig(n_tasks=len(names)))
-batcher = GroupBatcher(sources, args.batch)
-log, stop = MetricLogger(), EarlyStopping(patience=25)
-
-for i in range(args.steps):
-    params, state, loss, m = step(params, state, batcher.next_batch())
-    if i % 10 == 0 or i == args.steps - 1:
-        row = log.log(i, loss=loss, **{names[t]: m["per_task_loss"][t]
-                                       for t in range(len(names))})
-        print(json.dumps({k: round(v, 4) for k, v in row.items()}))
-        if stop.update(float(loss)):
-            print("# early stopping (paper §5.1)")
-            break
-
-checkpoint.save(args.ckpt, {"params": params},
-                metadata={"arch": cfg.name, "hidden": cfg.gnn_hidden,
-                          "params_m": n_params / 1e6, "final_loss": float(loss)})
+# paper §5.1: AdamW + warmup-cosine, early stopping, checkpoint at the end
+session = Session.from_config(
+    SessionConfig(model="gfm-mtl", arch=cfg, steps=args.steps,
+                  batch_per_task=args.batch, lr=1e-3, warmup=30,
+                  grad_clip=1.0, accum=args.accum, log_every=10,
+                  eval_every=10, patience=25, ckpt_path=args.ckpt),
+    sources=sources, task_names=names)
+print(f"# model: EGNN {cfg.gnn_layers}x{cfg.gnn_hidden} + "
+      f"{len(names)} branches -> {session.n_params()/1e6:.1f}M params")
+result = session.run()
+print(f"# final loss {result.final_loss:.4f} "
+      f"(early stop: {result.stopped_early})")
 print(f"# checkpoint -> {args.ckpt}")

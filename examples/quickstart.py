@@ -1,26 +1,22 @@
-"""Quickstart: the paper's two-level MTL GFM in ~60 lines.
+"""Quickstart: the paper's two-level MTL GFM through the engine API.
 
-Builds the HydraGNN-style EGNN + per-source {energy, force} branches, trains
-on 3 synthetic multi-fidelity sources, and prints per-source MAEs — a
-miniature of the paper's Tables 1-2 protocol.
+One declarative ``Session`` builds the HydraGNN-style EGNN + per-source
+{energy, force} branches, trains on 3 synthetic multi-fidelity sources, and
+prints per-source MAEs — a miniature of the paper's Tables 1-2 protocol.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_smoke
-from repro.core import MTPConfig, gfm_eval_fn, make_gfm_mtl, make_mtp_train_step
-from repro.data.loader import GroupBatcher
+from repro.core import gfm_eval_fn
 from repro.data.synthetic_atoms import generate_all, to_batch_dict
-from repro.optim import adamw
+from repro.engine import Session, SessionConfig
 
 SOURCES = ["ani1x", "qm7x", "mptrj"]
 
 cfg = get_smoke("hydragnn-gfm")
-model = make_gfm_mtl(cfg, n_tasks=len(SOURCES))
-
 data = generate_all(256, max_atoms=cfg.max_atoms, max_edges=cfg.max_edges,
                     sources=SOURCES)
 train = [dict(species=s.species[:192], pos=s.pos[:192],
@@ -29,17 +25,13 @@ train = [dict(species=s.species[:192], pos=s.pos[:192],
               energy=s.energy[:192], forces=s.forces[:192])
          for s in data.values()]
 
-params = model.init(jax.random.PRNGKey(0))
-opt = adamw(3e-3)  # paper: AdamW (lr 1e-3 at full scale)
-state = opt.init(params)
-step = make_mtp_train_step(model, opt, MTPConfig(n_tasks=len(SOURCES)))
-batcher = GroupBatcher(train, batch_per_task=16)
-
-for i in range(200):
-    params, state, loss, metrics = step(params, state, batcher.next_batch())
-    if i % 25 == 0:
-        print(f"step {i:4d}  loss {float(loss):.4f}  "
-              f"per-task {np.round(np.asarray(metrics['per_task_loss']), 3)}")
+# paper: AdamW (lr 1e-3 at full scale; 3e-3 at this smoke scale)
+session = Session.from_config(
+    SessionConfig(model="gfm-mtl", arch=cfg, steps=200, batch_per_task=16,
+                  lr=3e-3, log_every=25),
+    sources=train, task_names=SOURCES)
+result = session.run()
+params = result.params
 
 ev = gfm_eval_fn(cfg)
 print("\nheld-out per-source MAE (energy/atom, force):")

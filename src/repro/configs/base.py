@@ -77,6 +77,10 @@ class ArchConfig:
     max_atoms: int = 0
     max_edges: int = 0
     n_species: int = 0
+    # message-aggregation kernel: "jnp" (one-hot matmul, CPU default) or
+    # "pallas" (blocked mask-matmul MXU kernel). Plumbed through egnn_apply
+    # so the MTL model builders pick it up without call-site edits.
+    segment_sum_impl: str = "jnp"
     # precision / memory ---------------------------------------------------
     param_dtype: Any = jnp.float32
     compute_dtype: Any = jnp.bfloat16

@@ -1,5 +1,5 @@
 from .taskpar import (MTPConfig, MultiTaskModel, batch_shardings,  # noqa: F401
-                      head_pspec, make_mtp_train_step, memory_per_device,
+                      head_pspec, memory_per_device,
                       mtp_value_and_grad_shardmap, param_shardings)
 from .mtl import make_gfm_mtl, make_lm_multitask, gfm_eval_fn, softmax_xent  # noqa: F401
 from . import balancing  # noqa: F401

@@ -19,6 +19,15 @@ collective scopes for the backward pass: a global all-reduce for trunk grads
 and a sub-group (data-axes-only) reduce for head grads. A ``shard_map``
 variant makes the two ``psum`` scopes explicit and is used to cross-validate
 the pjit path (tests/test_taskpar.py).
+
+This module owns the *sharding vocabulary* only: ``MTPConfig``, the
+``MultiTaskModel`` contract, the param/batch sharding builders and the
+explicit-collective ``mtp_value_and_grad_shardmap``. Train-step construction
+and compilation live in ``repro.engine``: build a step with
+``engine.make_step(model, optimizer, plan)`` and compile it with
+``ShardingPlan(mesh=..., mtp=..., backend=...).compile(step)`` — the single
+public path covering single-device jit, the pjit sharding formulation
+(mode="par"/"base") and the shard_map backend behind one signature.
 """
 from __future__ import annotations
 
@@ -26,7 +35,6 @@ import dataclasses
 from typing import Any, Callable, NamedTuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 Params = Any
@@ -84,13 +92,16 @@ def param_shardings(mesh: Mesh, params: Params, mtp: MTPConfig,
 
 def batch_shardings(mesh: Mesh, batch: Params, mtp: MTPConfig):
     """Task-major batch (n_tasks, B, ...). par: tasks over task_axis, B over
-    data axes. base: tasks replicated, B over ALL axes (pure DDP)."""
+    data axes. base: tasks replicated, B over ALL axes (pure DDP). Leaves
+    with fewer than 2 dims (e.g. stacked per-task weights (n_tasks,)) get
+    the spec truncated to their rank."""
     def spec(leaf):
         nd = leaf.ndim
         if mtp.mode == "par":
-            s = P(mtp.task_axis, tuple(mtp.data_axes), *([None] * (nd - 2)))
+            entries = (mtp.task_axis, tuple(mtp.data_axes))
         else:
-            s = P(None, mtp.all_axes, *([None] * (nd - 2)))
+            entries = (None, mtp.all_axes)
+        s = P(*(entries[:nd] + tuple([None] * (nd - 2))))
         return NamedSharding(mesh, s)
 
     return jax.tree_util.tree_map(spec, batch)
@@ -102,61 +113,16 @@ def memory_per_device(p_shared: int, p_head: int, n_heads: int, mode: str) -> in
 
 
 # ---------------------------------------------------------------------------
-# pjit train step (sharding-spec formulation)
-# ---------------------------------------------------------------------------
-
-def make_mtp_train_step(model: MultiTaskModel, optimizer, mtp: MTPConfig,
-                        mesh: Mesh | None = None, shared_spec_fn=None,
-                        task_weights=None, donate: bool = True):
-    """Returns (step_fn, shard_fns). step(params, opt_state, batch) ->
-    (params, opt_state, loss, metrics). If mesh is None: single-device jit."""
-    tw = jnp.ones((mtp.n_tasks,), jnp.float32) if task_weights is None else \
-        jnp.asarray(task_weights, jnp.float32)
-    tw = tw / tw.sum()
-
-    def step(params, opt_state, batch):
-        def loss(p):
-            per_task, metrics = model.loss_fn(p["shared"], p["heads"], batch)
-            return jnp.sum(per_task * tw), (per_task, metrics)
-
-        (l, (per_task, metrics)), grads = jax.value_and_grad(loss, has_aux=True)(params)
-        new_params, new_state = optimizer.update(grads, opt_state, params)
-        metrics = dict(metrics, per_task_loss=per_task)
-        return new_params, new_state, l, metrics
-
-    if mesh is None:
-        return jax.jit(step, donate_argnums=(0, 1) if donate else ())
-
-    def jit_with_shardings(params, opt_state, batch):
-        ps = param_shardings(mesh, params, mtp, shared_spec_fn)
-        os_ = AdamLike_shardings(opt_state, ps)
-        bs = batch_shardings(mesh, batch, mtp)
-        return jax.jit(step,
-                       in_shardings=(ps, os_, bs),
-                       out_shardings=(ps, os_, NamedSharding(mesh, P()), None),
-                       donate_argnums=(0, 1) if donate else ())
-
-    return step, jit_with_shardings
-
-
-def AdamLike_shardings(opt_state, param_shardings_tree):
-    """Moments mirror the params; step is replicated."""
-    from repro.optim import AdamWState
-    mesh = jax.tree_util.tree_leaves(param_shardings_tree)[0].mesh
-    return AdamWState(step=NamedSharding(mesh, P()),
-                      m=param_shardings_tree, v=param_shardings_tree)
-
-
-# ---------------------------------------------------------------------------
 # shard_map explicit-collective formulation (paper-verbatim psum scopes)
 # ---------------------------------------------------------------------------
 
 def mtp_value_and_grad_shardmap(model: MultiTaskModel, mesh: Mesh,
                                 mtp: MTPConfig):
     """Explicit two-scope gradient sync. Requires n_tasks == task-axis size.
-    Returns f(params, batch) -> (loss, grads) numerically identical to the
-    pjit path (head grads carry the 1/n_tasks factor of the mean-over-tasks
-    loss)."""
+    Returns f(params, batch) -> (loss, per_task_loss, grads) numerically
+    identical to the pjit path (head grads carry the 1/n_tasks factor of the
+    mean-over-tasks loss); per_task_loss is (n_tasks,), each entry averaged
+    over that task's data sub-group."""
     from jax.experimental.shard_map import shard_map
 
     ax_t = mtp.task_axis
@@ -180,8 +146,10 @@ def mtp_value_and_grad_shardmap(model: MultiTaskModel, mesh: Mesh,
         gs = jax.lax.pmean(gs, ax_d + (ax_t,))
         gh = jax.lax.pmean(gh, ax_d)
         gh = jax.tree_util.tree_map(lambda g: g / n_t, gh)
-        l = jax.lax.pmean(l, ax_d + (ax_t,))
-        return l, gs, gh
+        l_task = jax.lax.pmean(l, ax_d)              # this task's loss
+        per_task = jax.lax.all_gather(l_task, ax_t)  # (n_tasks,), replicated
+        l = jax.lax.pmean(l_task, ax_t)
+        return l, per_task, gs, gh
 
     def shead(leaf_ndim):
         return P(ax_t, *([None] * (leaf_ndim - 1)))
@@ -196,12 +164,13 @@ def mtp_value_and_grad_shardmap(model: MultiTaskModel, mesh: Mesh,
         )
         out_specs = (
             P(),
+            P(),
             jax.tree_util.tree_map(lambda l: P(), shared),
             jax.tree_util.tree_map(lambda l: shead(l.ndim), heads),
         )
         fn = shard_map(local, mesh=mesh, in_specs=in_specs,
                        out_specs=out_specs, check_rep=False)
-        l, gs, gh = fn(shared, heads, batch)
-        return l, {"shared": gs, "heads": gh}
+        l, per_task, gs, gh = fn(shared, heads, batch)
+        return l, per_task, {"shared": gs, "heads": gh}
 
     return f

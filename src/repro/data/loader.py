@@ -53,3 +53,18 @@ class GroupBatcher:
         for k in rows[0]:
             out[k] = jnp.stack([jnp.asarray(r[k]) for r in rows], axis=0)
         return out
+
+
+class SingleBatcher:
+    """Flat (no task dim) uniform-random batcher over one source dict —
+    the single-task analogue of GroupBatcher for the engine's "lm" model."""
+
+    def __init__(self, source: dict, batch: int, *, seed=0):
+        self.source = source
+        self.B = batch
+        self.n = len(next(iter(source.values())))
+        self.rng = np.random.default_rng(seed)
+
+    def next_batch(self) -> dict:
+        idx = self.rng.integers(0, self.n, self.B)
+        return {k: jnp.asarray(v[idx]) for k, v in self.source.items()}

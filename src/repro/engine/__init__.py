@@ -1,0 +1,28 @@
+"""repro.engine — the declarative training-session API.
+
+One consistent surface for single-task, multi-task and task-parallel
+pre-training:
+
+    from repro.engine import Session, SessionConfig
+    result = Session.from_config(
+        SessionConfig(model="gfm-mtl", arch=cfg, steps=300),
+        sources=sources).run()
+
+Lower-level pieces (all public):
+
+  * ``TrainState`` / ``StepOutput`` / ``TrainStep`` — the unified step
+    protocol ``step(state, batch) -> (state, StepOutput)``;
+  * ``make_step`` / ``make_grad_fn`` / ``with_grad_accum`` — step assembly
+    (gradient accumulation works for every step, LM and multi-task alike);
+  * ``ShardingPlan`` — mesh + MTPConfig + backend choice behind one
+    ``plan.compile(step)`` call (jit / pjit / shard_map);
+  * ``build_model`` / ``register_model`` — the model registry.
+"""
+from .state import StepOutput, TrainState  # noqa: F401
+from .step import (SingleTaskModel, TrainStep, make_grad_fn,  # noqa: F401
+                   make_step, make_train_step, multitask_grad_fn,
+                   normalized_task_weights, shardmap_grad_fn, single_grad_fn,
+                   with_grad_accum)
+from .plan import CompiledStep, ShardingPlan  # noqa: F401
+from .registry import available_models, build_model, register_model  # noqa: F401
+from .session import Session, SessionConfig, SessionResult  # noqa: F401

@@ -1,0 +1,172 @@
+"""ShardingPlan — one object that owns the parallelism decisions.
+
+A plan bundles the mesh, the multi-task-parallelism config (``MTPConfig``),
+the param/opt/batch sharding rules and the compilation backend behind a
+single ``plan.compile(step)`` call:
+
+  * ``mesh=None``                         -> plain single-device ``jax.jit``
+  * ``mesh=..., backend="pjit"``          -> jit with NamedSharding in/out
+    specs (XLA SPMD emits the paper's two collective scopes from the
+    shardings; covers ``mtp.mode="par"`` and ``mode="base"``)
+  * ``mesh=..., backend="shard_map"``     -> explicit-collective formulation
+    (the grad_fn built by ``make_grad_fn`` carries the two psum scopes)
+
+This replaces the old dual-return ``make_mtp_train_step`` wart: there is
+exactly one public way to build a compiled step, and single-device vs
+sharded is a config difference, not a different call path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.taskpar import MTPConfig, batch_shardings, param_shardings
+from .state import StepOutput, TrainState
+
+BACKENDS = ("auto", "jit", "pjit", "shard_map")
+
+
+def _is_multitask_params(params) -> bool:
+    return isinstance(params, dict) and set(params) == {"shared", "heads"}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPlan:
+    mesh: Mesh | None = None
+    mtp: MTPConfig | None = None
+    backend: str = "auto"                    # auto | jit | pjit | shard_map
+    shared_spec_fn: Callable | None = None   # trunk params (multitask layout)
+    spec_fn: Callable | None = None          # flat params (single-task layout)
+    donate: bool = True
+
+    def __post_init__(self):
+        assert self.backend in BACKENDS, f"backend '{self.backend}'"
+        if self.backend in ("pjit", "shard_map"):
+            assert self.mesh is not None, \
+                f"backend '{self.backend}' needs a mesh"
+
+    @property
+    def resolved_backend(self) -> str:
+        if self.backend != "auto":
+            return self.backend
+        return "jit" if self.mesh is None else "pjit"
+
+    # -- sharding trees ----------------------------------------------------
+
+    def params_shardings(self, params):
+        assert self.mesh is not None
+        if self.mtp is not None and _is_multitask_params(params):
+            return param_shardings(self.mesh, params, self.mtp,
+                                   self.shared_spec_fn)
+        from repro.configs.sharding import tree_shardings
+        fn = self.spec_fn or (lambda path, leaf: P())
+        return tree_shardings(self.mesh, params, fn)
+
+    def opt_shardings(self, opt_state, p_shard):
+        """Optimizer moments mirror the params; scalars replicate."""
+        rep = NamedSharding(self.mesh, P())
+        from repro.optim import AdamWState
+        if isinstance(opt_state, AdamWState):
+            return AdamWState(step=rep, m=p_shard, v=p_shard)
+        raise NotImplementedError(
+            f"no sharding rule for optimizer state {type(opt_state).__name__}")
+
+    def state_shardings(self, state: TrainState) -> TrainState:
+        rep = NamedSharding(self.mesh, P())
+        ps = self.params_shardings(state.params)
+        os_ = self.opt_shardings(state.opt_state, ps)
+        rng = None if state.rng is None else \
+            jax.tree_util.tree_map(lambda _: rep, state.rng)
+        return TrainState(params=ps, opt_state=os_, step=rep, rng=rng)
+
+    def data_batch_shardings(self, batch):
+        assert self.mesh is not None
+        if self.mtp is not None:
+            return batch_shardings(self.mesh, batch, self.mtp)
+        # flat batch: dim 0 over every non-model axis (pure DDP)
+        axes = tuple(a for a in self.mesh.axis_names if a != "model")
+
+        def spec(leaf):
+            s = P(axes) if leaf.ndim >= 1 else P()
+            return NamedSharding(self.mesh, s)
+        return jax.tree_util.tree_map(spec, batch)
+
+    # -- placement helpers -------------------------------------------------
+
+    def shard_state(self, state: TrainState) -> TrainState:
+        if self.mesh is None:
+            return state
+        return jax.device_put(state, self.state_shardings(state))
+
+    def shard_batch(self, batch):
+        if self.mesh is None:
+            return batch
+        return jax.device_put(batch, self.data_batch_shardings(batch))
+
+    # -- dry-run templates -------------------------------------------------
+
+    def state_template(self, init_fn, optimizer) -> TrainState:
+        """TrainState of ShapeDtypeStructs (zero allocation — eval_shape
+        only), with this plan's shardings attached when a mesh is set.
+        Feed the result to ``plan.compile(step).lower(...)`` for dry-runs."""
+        import jax.numpy as jnp
+        key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        p_shapes = jax.eval_shape(init_fn, key)
+        o_shapes = jax.eval_shape(optimizer.init, p_shapes)
+        shapes = TrainState(params=p_shapes, opt_state=o_shapes,
+                            step=jax.ShapeDtypeStruct((), jnp.int32), rng=None)
+        if self.mesh is None:
+            return shapes
+        return jax.tree_util.tree_map(
+            lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+            shapes, self.state_shardings(shapes))
+
+    # -- compilation -------------------------------------------------------
+
+    def compile(self, step) -> "CompiledStep":
+        """The one public way to build a compiled step. Works for concrete
+        arrays and for ShapeDtypeStruct templates (``.lower`` for dry-runs)."""
+        return CompiledStep(self, step)
+
+
+class CompiledStep:
+    """Lazy jit wrapper: sharding specs are derived from the first
+    (state, batch) it sees — concrete arrays or ShapeDtypeStructs."""
+
+    def __init__(self, plan: ShardingPlan, step):
+        self.plan = plan
+        self.step = step
+        self._jitted = None
+
+    def _build(self, state, batch):
+        plan = self.plan
+        donate = (0,) if plan.donate else ()
+        if plan.resolved_backend == "jit":
+            return jax.jit(self.step, donate_argnums=donate)
+        ss = plan.state_shardings(state)
+        # ShapeDtypeStruct templates may carry hand-attached batch shardings
+        # (e.g. input_specs' replicate-on-non-divisible fallback in dryruns);
+        # honor those, fill the rest from the plan's rule
+        bs = jax.tree_util.tree_map(
+            lambda leaf, sh: leaf.sharding
+            if (isinstance(leaf, jax.ShapeDtypeStruct)
+                and leaf.sharding is not None) else sh,
+            batch, plan.data_batch_shardings(batch))
+        rep = NamedSharding(plan.mesh, P())
+        out = (ss, StepOutput(loss=rep, metrics=None))
+        return jax.jit(self.step, in_shardings=(ss, bs), out_shardings=out,
+                       donate_argnums=donate)
+
+    def _get(self, state, batch):
+        if self._jitted is None:
+            self._jitted = self._build(state, batch)
+        return self._jitted
+
+    def __call__(self, state, batch):
+        return self._get(state, batch)(state, batch)
+
+    def lower(self, state, batch):
+        return self._get(state, batch).lower(state, batch)

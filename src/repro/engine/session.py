@@ -1,0 +1,193 @@
+"""Session — the engine front door.
+
+``Session.from_config(cfg, sources=...).run()`` composes everything one used
+to hand-wire per entry point: model registry, ``GroupBatcher``/
+``SingleBatcher`` data feeding, AdamW + schedule, ``ShardingPlan`` (mesh /
+MTP mode / backend), gradient accumulation, ``EarlyStopping``,
+``MetricLogger``, eval and checkpointing — then runs the unified train loop
+and returns a ``SessionResult``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.core.taskpar import MTPConfig, MultiTaskModel
+from repro.data.loader import GroupBatcher, SingleBatcher
+from repro.optim import adamw, warmup_cosine
+from repro.train import checkpoint
+from repro.train.loop import EarlyStopping, MetricLogger, train_loop
+
+from .plan import ShardingPlan
+from .registry import build_model
+from .state import TrainState
+from .step import make_step
+
+
+@dataclasses.dataclass(frozen=True)
+class SessionConfig:
+    model: str                        # registry name (see engine.registry)
+    arch: Any                         # ArchConfig
+    steps: int = 100
+    batch_per_task: int = 16          # per-task batch (== batch for "lm")
+    # optimizer
+    lr: float = 1e-3
+    warmup: int = 0                   # >0 => warmup_cosine(lr, warmup, steps)
+    weight_decay: float = 0.01
+    grad_clip: float = 0.0
+    accum: int = 1                    # gradient-accumulation microbatches
+    # parallelism (mesh itself is passed to Session — it is runtime state)
+    mode: str = "par"                 # MTP head sharding: "par" | "base"
+    backend: str = "auto"             # auto | jit | pjit | shard_map
+    # loop control
+    log_every: int = 10
+    eval_every: int = 50
+    patience: int = 0                 # >0 => early stopping
+    min_delta: float = 1e-4
+    val_metric: str = "val_loss"      # row key EarlyStopping watches
+    # misc
+    seed: int = 0
+    task_weights: tuple | None = None
+    ckpt_path: str | None = None
+    verbose: bool = True
+    # buffer donation: fastest, but the session's TrainState is CONSUMED by
+    # each step — if run() raises mid-loop, session.state buffers are gone.
+    # Set False to keep pre-run state recoverable after a failure.
+    donate: bool = True
+
+    def replace(self, **kw) -> "SessionConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass
+class SessionResult:
+    state: TrainState
+    logger: MetricLogger
+    final_loss: float
+    last_metrics: dict
+    stopped_early: bool
+
+    @property
+    def params(self):
+        return self.state.params
+
+
+class Session:
+    """One declarative training session; see module docstring.
+
+    sources: list of per-task sample dicts (multi-task models) or a single
+    sample dict (the "lm" single-task model). eval_fn(params) -> dict of
+    scalar metrics, merged into logged rows (put cfg.val_metric in it to
+    early-stop on validation, per paper §5.1)."""
+
+    def __init__(self, cfg: SessionConfig, *, sources=None, batcher=None,
+                 mesh=None, eval_fn: Callable | None = None,
+                 task_names: list[str] | None = None, model=None,
+                 model_kwargs: dict | None = None):
+        assert cfg.steps >= 1, f"SessionConfig.steps must be >= 1, got {cfg.steps}"
+        self.cfg = cfg
+        self.eval_fn = eval_fn
+
+        # task count comes from the data (one source per task)
+        if batcher is not None:
+            n_tasks = (len(batcher.sources)
+                       if isinstance(batcher, GroupBatcher) else 1)
+        else:
+            assert sources is not None, "Session needs sources or a batcher"
+            n_tasks = len(sources) if isinstance(sources, (list, tuple)) else 1
+        self.model = model if model is not None else \
+            build_model(cfg.model, cfg.arch, n_tasks=n_tasks,
+                        **(model_kwargs or {}))
+        # batching follows the BUILT model's flavour (works for any model
+        # registered via @register_model, not just the built-in names)
+        multitask = isinstance(self.model, MultiTaskModel)
+        if batcher is None:
+            if multitask:
+                assert isinstance(sources, (list, tuple)), \
+                    "multi-task session takes a list of per-task sources"
+                batcher = GroupBatcher(list(sources), cfg.batch_per_task,
+                                       seed=cfg.seed)
+            else:
+                if isinstance(sources, (list, tuple)):
+                    assert len(sources) == 1, (
+                        f"single-task model '{cfg.model}' got {len(sources)} "
+                        "sources; use a multi-task model (e.g. 'lm-mtl') or "
+                        "pass one source")
+                    sources = sources[0]
+                batcher = SingleBatcher(sources, cfg.batch_per_task,
+                                        seed=cfg.seed)
+                n_tasks = 1
+        self.batcher = batcher
+        self.task_names = task_names or [f"task{t}" for t in range(n_tasks)]
+        assert len(self.task_names) == n_tasks, \
+            f"{len(self.task_names)} task_names for {n_tasks} tasks"
+
+        mtp = None
+        if multitask:
+            # data axes follow the mesh: everything but the task axis (so a
+            # multi-pod mesh's "pod" axis carries batch too)
+            data_axes = tuple(a for a in mesh.axis_names if a != "model") \
+                if mesh is not None else ("data",)
+            mtp = MTPConfig(n_tasks=n_tasks, mode=cfg.mode,
+                            data_axes=data_axes)
+        self.plan = ShardingPlan(mesh=mesh, mtp=mtp, backend=cfg.backend,
+                                 donate=cfg.donate)
+
+        lr = warmup_cosine(cfg.lr, cfg.warmup, cfg.steps) if cfg.warmup \
+            else cfg.lr
+        self.optimizer = adamw(lr, weight_decay=cfg.weight_decay,
+                               grad_clip=cfg.grad_clip)
+        step = make_step(self.model, self.optimizer, self.plan,
+                         accum=cfg.accum, task_weights=cfg.task_weights)
+        self.compiled_step = self.plan.compile(step)
+
+        params = self.model.init(jax.random.PRNGKey(cfg.seed))
+        state = TrainState.create(params, self.optimizer,
+                                  rng=jax.random.PRNGKey(cfg.seed + 1))
+        self.state = self.plan.shard_state(state)
+
+    @classmethod
+    def from_config(cls, cfg: SessionConfig, **kw) -> "Session":
+        return cls(cfg, **kw)
+
+    def n_params(self) -> int:
+        return sum(int(x.size) for x in
+                   jax.tree_util.tree_leaves(self.state.params))
+
+    def _metric_fn(self, out) -> dict:
+        m = out.metrics
+        extras = {}
+        if "per_task_loss" in m:
+            pt = np.asarray(m["per_task_loss"])
+            extras.update({self.task_names[t]: float(pt[t])
+                           for t in range(pt.shape[0])})
+        return extras
+
+    def run(self) -> SessionResult:
+        cfg = self.cfg
+        early = EarlyStopping(patience=cfg.patience,
+                              min_delta=cfg.min_delta) \
+            if cfg.patience > 0 else None
+        state, logger, last_out = train_loop(
+            self.compiled_step, self.state,
+            lambda: self.plan.shard_batch(self.batcher.next_batch()),
+            steps=cfg.steps, eval_fn=self.eval_fn,
+            eval_every=cfg.eval_every, log_every=cfg.log_every,
+            early_stop=early, val_metric=cfg.val_metric,
+            metric_fn=self._metric_fn, verbose=cfg.verbose)
+        self.state = state
+        stopped = bool(early and early.bad >= early.patience)
+        final_loss = float(last_out.loss)
+        if cfg.ckpt_path:
+            checkpoint.save(cfg.ckpt_path, {"params": state.params},
+                            metadata={"model": cfg.model,
+                                      "arch": cfg.arch.name,
+                                      "step": int(state.step),
+                                      "final_loss": final_loss})
+        return SessionResult(
+            state=state, logger=logger, final_loss=final_loss,
+            last_metrics=jax.tree_util.tree_map(np.asarray, last_out.metrics),
+            stopped_early=stopped)

@@ -1,0 +1,34 @@
+"""Unified training state and step output pytrees.
+
+Every train step in the repo — single-task LM, multi-task GFM/LM, pjit or
+shard_map backend — has ONE signature:
+
+    step(state: TrainState, batch) -> (TrainState, StepOutput)
+
+``TrainState`` bundles params, optimizer state, a step counter and an
+(optional) PRNG key into a single donat-able pytree; ``StepOutput`` carries
+the scalar loss plus a dict of auxiliary metrics (e.g. ``per_task_loss``).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax.numpy as jnp
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jnp.ndarray          # () int32
+    rng: Any = None            # optional PRNG key, threaded through steps
+
+    @classmethod
+    def create(cls, params, optimizer, rng=None) -> "TrainState":
+        """Initialise from params + an ``Optimizer`` (repro.optim)."""
+        return cls(params=params, opt_state=optimizer.init(params),
+                   step=jnp.zeros((), jnp.int32), rng=rng)
+
+
+class StepOutput(NamedTuple):
+    loss: jnp.ndarray          # () float
+    metrics: dict              # auxiliary metric pytree (may be empty)

@@ -1,0 +1,172 @@
+"""Unified train-step construction.
+
+The three divergent step factories of the old API (``make_lm_train_step``,
+the ``make_mtp_train_step`` pjit path, ``mtp_value_and_grad_shardmap``) are
+unified behind one pipeline:
+
+    grad_fn = make_grad_fn(model, plan)          # backend-aware
+    grad_fn = with_grad_accum(grad_fn, accum)    # works for ALL steps
+    step    = make_train_step(grad_fn, optimizer)
+    compiled = plan.compile(step)                # jit / pjit / shard_map
+
+``make_step`` composes the pipeline in one call. A ``grad_fn`` has the
+signature ``grad_fn(params, batch) -> (loss, metrics, grads)``; a step has
+``step(state, batch) -> (state, StepOutput)``.
+
+Models come in two flavours:
+
+  * ``MultiTaskModel`` (repro.core.taskpar): params ``{"shared", "heads"}``,
+    ``loss_fn(shared, heads, batch) -> (per_task_loss, metrics)`` over a
+    task-major batch — the paper's technique;
+  * ``SingleTaskModel``: flat params, scalar ``loss_fn(params, batch)`` —
+    the standard LM path.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.taskpar import MultiTaskModel, mtp_value_and_grad_shardmap
+from .state import StepOutput, TrainState
+
+# step(state, batch) -> (state, StepOutput)
+TrainStep = Callable[[TrainState, Any], tuple[TrainState, StepOutput]]
+
+
+class SingleTaskModel(NamedTuple):
+    """init(key) -> params; loss_fn(params, batch) -> scalar loss."""
+    init: Callable
+    loss_fn: Callable
+    name: str = "single"
+
+
+def normalized_task_weights(n_tasks: int, task_weights=None) -> jnp.ndarray:
+    tw = jnp.ones((n_tasks,), jnp.float32) if task_weights is None else \
+        jnp.asarray(task_weights, jnp.float32)
+    return tw / tw.sum()
+
+
+# ---------------------------------------------------------------------------
+# grad_fn builders
+# ---------------------------------------------------------------------------
+
+def single_grad_fn(model: SingleTaskModel) -> Callable:
+    def grad_fn(params, batch):
+        l, grads = jax.value_and_grad(model.loss_fn)(params, batch)
+        return l, {}, grads
+    return grad_fn
+
+
+def multitask_grad_fn(model: MultiTaskModel, n_tasks: int,
+                      task_weights=None) -> Callable:
+    tw = normalized_task_weights(n_tasks, task_weights)
+
+    def grad_fn(params, batch):
+        def loss(p):
+            per_task, metrics = model.loss_fn(p["shared"], p["heads"], batch)
+            return jnp.sum(per_task * tw), (per_task, metrics)
+
+        (l, (per_task, metrics)), grads = \
+            jax.value_and_grad(loss, has_aux=True)(params)
+        return l, dict(metrics, per_task_loss=per_task), grads
+
+    return grad_fn
+
+
+def shardmap_grad_fn(model: MultiTaskModel, mesh, mtp) -> Callable:
+    """Explicit two-scope collective backend (paper-verbatim psum scopes).
+    Same StepOutput contract as the pjit path: metrics carry per_task_loss."""
+    vg = mtp_value_and_grad_shardmap(model, mesh, mtp)
+
+    def grad_fn(params, batch):
+        l, per_task, grads = vg(params, batch)
+        return l, {"per_task_loss": per_task}, grads
+
+    return grad_fn
+
+
+def make_grad_fn(model, plan=None, *, task_weights=None) -> Callable:
+    """Backend-aware grad_fn for either model flavour.
+
+    plan: a ShardingPlan (or None for single-device). The shard_map backend
+    requires uniform task weights (its sub-group psum carries an implicit
+    1/n_tasks factor)."""
+    from .plan import ShardingPlan
+    plan = plan or ShardingPlan()
+    if isinstance(model, MultiTaskModel):
+        assert plan.mtp is not None, "multi-task model needs plan.mtp"
+        if plan.resolved_backend == "shard_map":
+            assert task_weights is None, \
+                "shard_map backend supports uniform task weights only"
+            return shardmap_grad_fn(model, plan.mesh, plan.mtp)
+        return multitask_grad_fn(model, plan.mtp.n_tasks, task_weights)
+    return single_grad_fn(model)
+
+
+# ---------------------------------------------------------------------------
+# gradient accumulation — one wrapper for every step
+# ---------------------------------------------------------------------------
+
+def with_grad_accum(grad_fn: Callable, accum: int, axis: int = 0) -> Callable:
+    """Microbatch any grad_fn: splits the batch into ``accum`` slices along
+    ``axis`` (0 for flat batches, 1 for task-major ``(T, B, ...)`` batches)
+    and averages losses/metrics/grads over the slices with ``lax.scan``."""
+    if accum <= 1:
+        return grad_fn
+
+    def split(x):
+        if x.ndim <= axis:
+            # leaf has no batch dim to slice (e.g. stacked per-task weights
+            # (n_tasks,) in a task-major batch): same value every microbatch
+            return jnp.broadcast_to(x[None], (accum,) + x.shape)
+        b = x.shape[axis]
+        assert b % accum == 0, f"batch dim {b} not divisible by accum={accum}"
+        shape = x.shape[:axis] + (accum, b // accum) + x.shape[axis + 1:]
+        return jnp.moveaxis(x.reshape(shape), axis, 0)
+
+    def accum_fn(params, batch):
+        micro_batches = jax.tree_util.tree_map(split, batch)
+
+        def micro(carry, mb):
+            acc_l, acc_g = carry
+            l, metrics, g = grad_fn(params, mb)
+            carry = (acc_l + l, jax.tree_util.tree_map(jnp.add, acc_g, g))
+            return carry, metrics
+
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (l, grads), metrics = jax.lax.scan(
+            micro, (jnp.zeros(()), zeros), micro_batches)
+        metrics = jax.tree_util.tree_map(lambda m: jnp.mean(m, axis=0), metrics)
+        grads = jax.tree_util.tree_map(lambda g: g / accum, grads)
+        return l / accum, metrics, grads
+
+    return accum_fn
+
+
+# ---------------------------------------------------------------------------
+# step assembly
+# ---------------------------------------------------------------------------
+
+def make_train_step(grad_fn: Callable, optimizer) -> TrainStep:
+    """Wrap a grad_fn + optimizer into the unified TrainStep signature."""
+    def step(state: TrainState, batch):
+        loss, metrics, grads = grad_fn(state.params, batch)
+        new_params, new_opt = optimizer.update(grads, state.opt_state,
+                                               state.params)
+        new_state = TrainState(params=new_params, opt_state=new_opt,
+                               step=state.step + 1, rng=state.rng)
+        return new_state, StepOutput(loss=loss, metrics=metrics)
+    return step
+
+
+def make_step(model, optimizer, plan=None, *, accum: int = 1,
+              task_weights=None) -> TrainStep:
+    """One call from model + optimizer (+ plan) to an uncompiled TrainStep.
+    Compile it with ``plan.compile(step)``."""
+    grad_fn = make_grad_fn(model, plan, task_weights=task_weights)
+    axis = 1 if isinstance(model, MultiTaskModel) else 0
+    grad_fn = with_grad_accum(grad_fn, accum, axis=axis)
+    return make_train_step(grad_fn, optimizer)

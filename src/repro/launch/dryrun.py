@@ -26,11 +26,11 @@ from repro import configs
 from repro.configs import SHAPES
 from repro.configs.sharding import make_spec_fn, tree_shardings
 from repro.configs.specs import cache_specs, data_axes, input_specs
+from repro.engine import ShardingPlan, build_model, make_step
 from repro.launch.hlo_analysis import analyze_hlo
 from repro.launch.hlo_stats import collective_stats, op_histogram
 from repro.launch.mesh import make_gfm_paper_mesh, make_production_mesh
 from repro.optim import adamw
-from repro.train.loop import make_lm_train_step
 from repro.train.serve import make_decode_step
 
 
@@ -82,15 +82,16 @@ def build_lowered(arch: str, shape_name: str, mesh, impl="chunked",
         return _build_gfm_lowered(cfg, mesh)
 
     if shape.kind == "train":
-        from repro.models.transformer import lm_init
-        p_sds, o_sds, opt = params_and_opt_specs(
-            cfg, mesh, lambda k: lm_init(k, cfg),
-            moment_dtype=cfg.moment_dtype)
+        model = build_model("lm", cfg, impl=impl)
+        opt = adamw(1e-3, weight_decay=0.01, grad_clip=1.0,
+                    moment_dtype=cfg.moment_dtype)
+        plan = ShardingPlan(mesh=mesh, spec_fn=make_spec_fn(cfg, mesh))
         batch = input_specs(cfg, shape, mesh)
         if accum == 1:
             accum = cfg.train_accum
-        step = make_lm_train_step(cfg, opt, impl=impl, accum=accum)
-        lowered = jax.jit(step, donate_argnums=(0, 1)).lower(p_sds, o_sds, batch)
+        step = make_step(model, opt, plan, accum=accum)
+        lowered = plan.compile(step).lower(
+            plan.state_template(model.init, opt), batch)
         return lowered, {"kind": "train", "accum": accum}
 
     if shape.kind == "prefill":
@@ -136,9 +137,7 @@ def build_lowered(arch: str, shape_name: str, mesh, impl="chunked",
 
 def _build_gfm_lowered(cfg, mesh):
     """The paper's model: MTP x DDP train step on the task mesh."""
-    from repro.core import MTPConfig, make_mtp_train_step, param_shardings, \
-        batch_shardings, make_gfm_mtl
-    from repro.core.taskpar import AdamLike_shardings
+    from repro.core import MTPConfig, make_gfm_mtl
     model = make_gfm_mtl(cfg, cfg.n_tasks)
     # task-sharded heads need n_tasks to divide the task axis; otherwise run
     # the paper's MTL-base mode (heads replicated, pure DDP)
@@ -146,12 +145,8 @@ def _build_gfm_lowered(cfg, mesh):
     mtp = MTPConfig(n_tasks=cfg.n_tasks, mode=mode,
                     data_axes=data_axes(mesh))
     opt = adamw(1e-3)
-    key_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
-    p_shapes = jax.eval_shape(model.init, key_spec)
-    p_shard = param_shardings(mesh, p_shapes, mtp)
-    p_sds = _sds_with_shardings(p_shapes, p_shard)
-    o_shapes = jax.eval_shape(opt.init, p_shapes)
-    o_sds = _sds_with_shardings(o_shapes, AdamLike_shardings(o_shapes, p_shard))
+    plan = ShardingPlan(mesh=mesh, mtp=mtp)
+    state_sds = plan.state_template(model.init, opt)
 
     # paper: local batch 128 per process; the per-task global batch must
     # divide the axes its dim is sharded over ("data" in par mode, all axes
@@ -172,11 +167,11 @@ def _build_gfm_lowered(cfg, mesh):
         "energy": jax.ShapeDtypeStruct((T, B), jnp.float32),
         "forces": jax.ShapeDtypeStruct((T, B, A, 3), jnp.float32),
     }
-    b_shard = batch_shardings(mesh, batch_shapes, mtp)
-    b_sds = _sds_with_shardings(batch_shapes, b_shard)
+    b_sds = _sds_with_shardings(batch_shapes,
+                                plan.data_batch_shardings(batch_shapes))
 
-    step = make_mtp_train_step(model, opt, mtp)  # plain step; jit below
-    lowered = jax.jit(step, donate_argnums=(0, 1)).lower(p_sds, o_sds, b_sds)
+    step = make_step(model, opt, plan)
+    lowered = plan.compile(step).lower(state_sds, b_sds)
     return lowered, {"kind": "gfm-train", "n_tasks": cfg.n_tasks,
                      "mtp_mode": mode}
 
@@ -208,12 +203,14 @@ def analyze(lowered, compile_too=True) -> dict:
         except Exception as e:  # pragma: no cover
             res["cost"] = {"error": str(e)}
         hlo = compiled.as_text()
+        # loop-aware per-device stats (XLA cost_analysis counts while bodies
+        # once); only meaningful on compiled HLO — lowered.as_text() is
+        # StableHLO, which the analyzer cannot parse
+        res["hlo"] = analyze_hlo(hlo)
+        res["collectives_once"] = collective_stats(hlo)
+        res["top_ops"] = op_histogram(hlo, 12)
     else:
-        hlo = lowered.as_text()
-    # loop-aware per-device stats (XLA cost_analysis counts while bodies once)
-    res["hlo"] = analyze_hlo(hlo)
-    res["collectives_once"] = collective_stats(hlo)
-    res["top_ops"] = op_histogram(hlo, 12)
+        res["hlo"] = {"skipped": "no-compile: StableHLO only"}
     return res
 
 

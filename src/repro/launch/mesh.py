@@ -8,19 +8,29 @@ import jax
 from jax.sharding import Mesh
 
 
+def _make_mesh(shape, axes) -> Mesh:
+    """jax.make_mesh across jax versions: axis_types= (and AxisType) only
+    exist on newer releases; fall back to the plain call."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(shape, axes,
+                                 axis_types=(axis_type.Auto,) * len(axes))
+        except TypeError:
+            pass
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_alt_mesh(model: int = 8) -> Mesh:
     """Same 256-chip pod, reshaped so the TP degree divides awkward head
     counts (e.g. granite's 24 heads on model=8) — §Perf-2 mesh-reshape."""
-    return jax.make_mesh(
-        (256 // model, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _make_mesh((256 // model, model), ("data", "model"))
 
 
 def make_gfm_paper_mesh(n_tasks: int = 5, dp: int = 100) -> Mesh:
@@ -33,6 +43,4 @@ def make_gfm_paper_mesh(n_tasks: int = 5, dp: int = 100) -> Mesh:
 
 def make_host_mesh(data: int, model: int) -> Mesh:
     """Small mesh over however many host devices exist (tests/examples)."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _make_mesh((data, model), ("data", "model"))

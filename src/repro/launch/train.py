@@ -1,4 +1,4 @@
-"""Runnable trainer CLI (CPU-scale; the full-scale path is the dry-run).
+"""Runnable trainer CLI — a thin argparse front-end over ``repro.engine``.
 
   # the paper's GFM, MTP x DDP over the host devices:
   PYTHONPATH=src python -m repro.launch.train --mode gfm --steps 200
@@ -12,114 +12,69 @@
 from __future__ import annotations
 
 import argparse
-import json
-
-import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro import configs
-from repro.core import MTPConfig, make_gfm_mtl, make_lm_multitask, \
-    make_mtp_train_step
 from repro.data.lm_data import make_lm_sources
-from repro.data.loader import GroupBatcher
 from repro.data.synthetic_atoms import generate_all
-from repro.optim import adamw, warmup_cosine
-from repro.train import checkpoint
-from repro.train.loop import EarlyStopping, MetricLogger, make_lm_train_step
+from repro.engine import Session, SessionConfig
 
 
-def run_gfm(args):
-    cfg = configs.get_smoke("hydragnn-gfm") if args.smoke else \
-        configs.get("hydragnn-gfm").replace(gnn_hidden=128, head_hidden=64)
-    n_tasks = cfg.n_tasks
-    sources = list(generate_all(args.samples, max_atoms=cfg.max_atoms,
-                                max_edges=cfg.max_edges).values())[:n_tasks]
-    srcs = [dict(species=s.species, pos=s.pos, edge_src=s.edge_src,
-                 edge_dst=s.edge_dst, node_mask=s.node_mask,
-                 edge_mask=s.edge_mask, energy=s.energy, forces=s.forces)
-            for s in sources]
-    model = make_gfm_mtl(cfg, n_tasks)
-    params = model.init(jax.random.PRNGKey(args.seed))
-    # paper: AdamW, lr 1e-3, local batch 128
-    opt = adamw(warmup_cosine(args.lr, 20, args.steps))
-    st = opt.init(params)
-    step = make_mtp_train_step(model, opt, MTPConfig(n_tasks=n_tasks))
-    gb = GroupBatcher(srcs, args.batch, seed=args.seed)
-    log, es = MetricLogger(), EarlyStopping(patience=20)
-    for i in range(args.steps):
-        params, st, loss, m = step(params, st, gb.next_batch())
-        if i % args.log_every == 0 or i == args.steps - 1:
-            row = log.log(i, loss=loss,
-                          **{f"task{t}": m["per_task_loss"][t]
-                             for t in range(n_tasks)})
-            print(json.dumps(row))
-            if es.update(float(loss)):
-                print("# early stop")
-                break
-    if args.ckpt:
-        checkpoint.save(args.ckpt, {"params": params},
-                        metadata={"arch": "hydragnn-gfm", "step": i})
-    return float(loss)
+def session_for(args) -> Session:
+    if args.mode == "gfm":
+        cfg = configs.get_smoke("hydragnn-gfm") if args.smoke else \
+            configs.get("hydragnn-gfm").replace(gnn_hidden=128, head_hidden=64)
+        data = list(generate_all(args.samples, max_atoms=cfg.max_atoms,
+                                 max_edges=cfg.max_edges).items())[:cfg.n_tasks]
+        sources = [dict(species=s.species, pos=s.pos, edge_src=s.edge_src,
+                        edge_dst=s.edge_dst, node_mask=s.node_mask,
+                        edge_mask=s.edge_mask, energy=s.energy,
+                        forces=s.forces) for _, s in data]
+        # paper: AdamW, lr 1e-3, warmup-cosine, early stopping
+        scfg = SessionConfig(model="gfm-mtl", arch=cfg, steps=args.steps,
+                             batch_per_task=args.batch, lr=args.lr,
+                             warmup=20, accum=args.accum, seed=args.seed,
+                             log_every=args.log_every,
+                             eval_every=args.log_every, patience=20,
+                             ckpt_path=args.ckpt)
+        return Session.from_config(scfg, sources=sources,
+                                   task_names=[k for k, _ in data])
 
-
-def run_lm(args, multitask=False):
     cfg = configs.get_smoke(args.arch)
-    if multitask:
-        cfg = cfg.replace(n_tasks=4)
-        model = make_lm_multitask(cfg)
+    if args.mode == "lm-mtl":
+        cfg = cfg.replace(n_tasks=args.tasks)
         sources = make_lm_sources(cfg.n_tasks, 64, args.seq, cfg.vocab)
-        gb = GroupBatcher(sources, args.batch)
-        params = model.init(jax.random.PRNGKey(args.seed))
-        opt = adamw(args.lr)
-        st = opt.init(params)
-        step = make_mtp_train_step(model, opt, MTPConfig(n_tasks=cfg.n_tasks))
-        log = MetricLogger()
-        for i in range(args.steps):
-            params, st, loss, _ = step(params, st, gb.next_batch())
-            if i % args.log_every == 0:
-                print(json.dumps(log.log(i, loss=loss)))
-        return float(loss)
+        scfg = SessionConfig(model="lm-mtl", arch=cfg, steps=args.steps,
+                             batch_per_task=args.batch, lr=args.lr,
+                             accum=args.accum, seed=args.seed,
+                             log_every=args.log_every, ckpt_path=args.ckpt)
+        return Session.from_config(scfg, sources=sources)
 
-    from repro.models import transformer
-    src = make_lm_sources(1, 256, args.seq, cfg.vocab)[0]
-    params = transformer.lm_init(jax.random.PRNGKey(args.seed), cfg)
-    opt = adamw(args.lr)
-    st = opt.init(params)
-    step = jax.jit(make_lm_train_step(cfg, opt))
-    rng = np.random.default_rng(args.seed)
-    log = MetricLogger()
-    for i in range(args.steps):
-        idx = rng.integers(0, src["tokens"].shape[0], args.batch)
-        batch = {"tokens": jnp.asarray(src["tokens"][idx]),
-                 "labels": jnp.asarray(src["labels"][idx])}
-        params, st, loss = step(params, st, batch)
-        if i % args.log_every == 0:
-            print(json.dumps(log.log(i, loss=loss)))
-    if args.ckpt:
-        checkpoint.save(args.ckpt, {"params": params},
-                        metadata={"arch": args.arch, "step": i})
-    return float(loss)
+    source = make_lm_sources(1, 256, args.seq, cfg.vocab)[0]
+    scfg = SessionConfig(model="lm", arch=cfg, steps=args.steps,
+                         batch_per_task=args.batch, lr=args.lr,
+                         accum=args.accum, seed=args.seed,
+                         log_every=args.log_every, ckpt_path=args.ckpt)
+    return Session.from_config(scfg, sources=source)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", default="gfm", choices=["gfm", "lm", "lm-mtl"])
     ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--tasks", type=int, default=4)
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--samples", type=int, default=256)
     ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--accum", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
-    if args.mode == "gfm":
-        run_gfm(args)
-    else:
-        run_lm(args, multitask=(args.mode == "lm-mtl"))
+    result = session_for(args).run()
+    return result.final_loss
 
 
 if __name__ == "__main__":

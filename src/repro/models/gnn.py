@@ -49,8 +49,12 @@ def egnn_init(key, cfg) -> Params:
     return p
 
 
-def egnn_apply(params: Params, batch: dict, *, cfg, impl="jnp") -> jnp.ndarray:
-    """-> node features (B, A, hidden). Invariant (distance-based) features."""
+def egnn_apply(params: Params, batch: dict, *, cfg, impl=None) -> jnp.ndarray:
+    """-> node features (B, A, hidden). Invariant (distance-based) features.
+    impl selects the segment-sum kernel; None defers to
+    ``cfg.segment_sum_impl`` (config-driven kernel selection)."""
+    if impl is None:
+        impl = getattr(cfg, "segment_sum_impl", "jnp") or "jnp"
     cd = cfg.compute_dtype
     species = batch["species"]
     pos = batch["pos"].astype(jnp.float32)

@@ -1,3 +1,3 @@
 from . import checkpoint, loop, serve  # noqa: F401
-from .loop import EarlyStopping, MetricLogger, make_lm_train_step, train_loop  # noqa: F401
+from .loop import EarlyStopping, MetricLogger, make_lm_loss, train_loop  # noqa: F401
 from .serve import greedy_generate, make_decode_step, make_prefill_step  # noqa: F401

@@ -1,18 +1,25 @@
-"""Training loop utilities: step factories, metrics, early stopping.
+"""Training-loop utilities for the ``repro.engine`` session API.
 
-``make_lm_train_step`` is the single-task (standard) LM step used by the
-assigned-architecture configs; the multi-task step lives in
-``repro.core.taskpar`` (the paper's technique). Both support gradient
-accumulation (microbatching) — the memory knob for the big dry-run configs.
+Step construction lives in ``repro.engine``: ``make_step(model, optimizer,
+plan)`` builds the unified ``step(state, batch) -> (state, StepOutput)`` and
+``ShardingPlan.compile(step)`` is the single public way to compile it
+(single-device jit, pjit shardings, or the shard_map backend). This module
+keeps the pieces the engine composes around a compiled step:
+
+  * ``make_lm_loss`` — the single-task LM loss consumed by the engine's
+    ``"lm"`` registry model;
+  * ``EarlyStopping`` — paper §5.1 stopping criterion. It watches the
+    VALIDATION metric when an eval_fn provides one (``val_metric`` row key)
+    and falls back to the training loss otherwise;
+  * ``MetricLogger`` — wall-clock-stamped metric rows;
+  * ``train_loop`` — the generic loop over a unified TrainStep, used by
+    ``engine.Session.run`` and usable standalone.
 """
 from __future__ import annotations
 
+import json
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable
-
-import jax
-import jax.numpy as jnp
 
 from repro.core.mtl import softmax_xent
 from repro.models import transformer
@@ -34,31 +41,6 @@ def make_lm_loss(cfg, impl="chunked"):
             l = l + cfg.router_aux_coef * aux
         return l
     return loss_fn
-
-
-def make_lm_train_step(cfg, optimizer, impl="chunked", accum: int = 1):
-    loss_fn = make_lm_loss(cfg, impl)
-
-    def step(params, opt_state, batch):
-        if accum == 1:
-            l, grads = jax.value_and_grad(loss_fn)(params, batch)
-        else:
-            def micro(carry, mb):
-                acc_l, acc_g = carry
-                l, g = jax.value_and_grad(loss_fn)(params, mb)
-                return (acc_l + l, jax.tree_util.tree_map(jnp.add, acc_g, g)), None
-            micro_batches = jax.tree_util.tree_map(
-                lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]),
-                batch)
-            zeros = jax.tree_util.tree_map(
-                lambda p: jnp.zeros(p.shape, jnp.float32), params)
-            (l, grads), _ = jax.lax.scan(micro, (jnp.zeros(()), zeros),
-                                         micro_batches)
-            l = l / accum
-            grads = jax.tree_util.tree_map(lambda g: g / accum, grads)
-        new_params, new_state = optimizer.update(grads, opt_state, params)
-        return new_params, new_state, l
-    return step
 
 
 @dataclass
@@ -90,20 +72,48 @@ class MetricLogger:
         return row
 
 
-def train_loop(step_fn, params, opt_state, batches, *, epochs_or_steps: int,
-               eval_fn=None, eval_every: int = 50, early_stop: EarlyStopping | None = None,
-               logger: MetricLogger | None = None, verbose: bool = False):
+def train_loop(step_fn, state, batches, *, steps: int, eval_fn=None,
+               eval_every: int = 50, log_every: int | None = None,
+               early_stop: EarlyStopping | None = None,
+               logger: MetricLogger | None = None,
+               val_metric: str = "val_loss", metric_fn=None,
+               verbose: bool = False):
+    """Run a unified TrainStep for ``steps`` iterations.
+
+    step_fn: ``step(state, batch) -> (state, StepOutput)`` (compiled via
+    ``ShardingPlan.compile`` or any callable with that signature).
+    batches: zero-arg callable or iterator yielding batches.
+    eval_fn: ``eval_fn(params) -> dict`` merged into eval rows; if the dict
+    contains ``val_metric``, EarlyStopping watches THAT (paper §5.1 stops on
+    validation), otherwise it falls back to the training loss.
+    metric_fn: ``metric_fn(out: StepOutput) -> dict`` of extra scalars to
+    log (e.g. named per-task losses).
+
+    Returns (state, logger, last StepOutput).
+    """
     logger = logger or MetricLogger()
-    for i in range(epochs_or_steps):
+    log_every = log_every or eval_every
+    out = None
+    for i in range(steps):
         batch = batches() if callable(batches) else next(batches)
-        out = step_fn(params, opt_state, batch)
-        params, opt_state, loss = out[0], out[1], out[2]
-        if (i + 1) % eval_every == 0 or i == 0:
-            row = logger.log(i, loss=loss)
-            if eval_fn is not None:
-                row.update(eval_fn(params))
-            if verbose:
-                print(row)
-            if early_stop is not None and early_stop.update(float(loss)):
+        state, out = step_fn(state, batch)
+        is_eval = (i + 1) % eval_every == 0 or i == 0 or i == steps - 1
+        is_log = (i + 1) % log_every == 0 or i == 0 or i == steps - 1
+        if not (is_eval or is_log):
+            continue
+        extras = metric_fn(out) if metric_fn is not None else {}
+        row = logger.log(i, loss=out.loss, **extras)
+        if eval_fn is not None and is_eval:
+            row.update({k: float(v) for k, v in eval_fn(state.params).items()})
+        if verbose:
+            print(json.dumps({k: round(v, 5) if isinstance(v, float) else v
+                              for k, v in row.items()}))
+        if early_stop is not None and is_eval:
+            criterion = row.get(val_metric, row["loss"])
+            if early_stop.update(float(criterion)):
+                if verbose:
+                    print(f"# early stopping (paper §5.1) at step {i}: "
+                          f"best {val_metric if val_metric in row else 'loss'}"
+                          f"={early_stop.best:.5f}")
                 break
-    return params, opt_state, logger
+    return state, logger, out

@@ -10,9 +10,9 @@ from repro import configs
 from repro.configs import ARCHS, SHAPES
 from repro.configs.specs import input_specs
 from repro.models import transformer
+from repro.engine import ShardingPlan, TrainState, build_model, make_step
 from repro.models.frontends import AUDIO_EMBED_DIM, VISION_EMBED_DIM
 from repro.optim import adamw
-from repro.train.loop import make_lm_train_step
 
 LM_ARCHS = [a for a in ARCHS if a != "hydragnn-gfm"]
 
@@ -55,15 +55,18 @@ def test_forward_and_train_step(arch):
     assert logits.shape == (B, S + n_media, cfg.padded_vocab)
     assert bool(jnp.isfinite(logits).all()), "NaN/Inf in logits"
 
-    # one train step
+    # one train step through the engine's unified API
     opt = adamw(1e-3)
-    opt_state = opt.init(params)
-    step = jax.jit(make_lm_train_step(cfg, opt))
-    params2, _, loss = step(params, opt_state, batch)
-    assert bool(jnp.isfinite(loss)), "NaN loss"
+    plan = ShardingPlan(donate=False)
+    model = build_model("lm", cfg)
+    step = plan.compile(make_step(model, opt, plan))
+    state = TrainState.create(params, opt)
+    state2, out = step(state, batch)
+    assert bool(jnp.isfinite(out.loss)), "NaN loss"
+    assert int(state2.step) == 1
     # params actually changed
     d = jax.tree_util.tree_map(lambda a, b: float(jnp.abs(a - b).max()),
-                               params, params2)
+                               params, state2.params)
     assert max(jax.tree_util.tree_leaves(d)) > 0
 
 

@@ -1,0 +1,281 @@
+"""Unit tests for the repro.engine training API: unified TrainStep protocol,
+gradient accumulation as a universal wrapper, ShardingPlan spec builders
+(incl. the ndim<2 batch-sharding regression), Session end to end."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.core import MTPConfig, batch_shardings, make_gfm_mtl
+from repro.data.lm_data import make_lm_sources
+from repro.data.loader import GroupBatcher
+from repro.data.synthetic_atoms import generate_all, to_batch_dict
+from repro.engine import (Session, SessionConfig, ShardingPlan, StepOutput,
+                          TrainState, available_models, build_model,
+                          make_step, with_grad_accum)
+from repro.optim import adamw
+from repro.train.loop import EarlyStopping, MetricLogger, train_loop
+
+
+def _lm_cfg(**kw):
+    base = dict(name="lm", n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+                d_ff=64, vocab=64, remat=False, compute_dtype=jnp.float32)
+    base.update(kw)
+    return ArchConfig(**base)
+
+
+def _gfm_cfg():
+    return ArchConfig(name="g", family="gnn", gnn_hidden=24, gnn_layers=2,
+                      n_species=64, head_hidden=12, head_layers=2,
+                      remat=False, compute_dtype=jnp.float32)
+
+
+def _gfm_sources(n=24, n_tasks=3):
+    names = ["ani1x", "qm7x", "mptrj"][:n_tasks]
+    data = generate_all(n, max_atoms=10, max_edges=40, sources=names)
+    return [dict(species=s.species, pos=s.pos, edge_src=s.edge_src,
+                 edge_dst=s.edge_dst, node_mask=s.node_mask,
+                 edge_mask=s.edge_mask, energy=s.energy, forces=s.forces)
+            for s in data.values()]
+
+
+def _max_err(a, b):
+    e = jax.tree_util.tree_map(lambda x, y: float(jnp.abs(x - y).max()), a, b)
+    return max(jax.tree_util.tree_leaves(e))
+
+
+# ---------------------------------------------------------------------------
+# unified step protocol
+# ---------------------------------------------------------------------------
+
+def test_unified_signature_lm_and_multitask():
+    """One signature — step(state, batch) -> (state, StepOutput) — for both
+    the single-task LM and the multi-task paths."""
+    opt = adamw(1e-3)
+    # LM
+    cfg = _lm_cfg()
+    model = build_model("lm", cfg)
+    batch = {k: jnp.asarray(v) for k, v in
+             make_lm_sources(1, 8, 16, cfg.vocab)[0].items()}
+    plan = ShardingPlan(donate=False)
+    state = TrainState.create(model.init(jax.random.PRNGKey(0)), opt)
+    state2, out = plan.compile(make_step(model, opt, plan))(state, batch)
+    assert isinstance(out, StepOutput) and np.isfinite(float(out.loss))
+    assert int(state2.step) == int(state.step) + 1
+    # multi-task GFM
+    model2 = make_gfm_mtl(_gfm_cfg(), 3)
+    gb = GroupBatcher(_gfm_sources(), 8)
+    plan2 = ShardingPlan(mtp=MTPConfig(n_tasks=3), donate=False)
+    st = TrainState.create(model2.init(jax.random.PRNGKey(0)), opt)
+    st2, out2 = plan2.compile(make_step(model2, opt, plan2))(st, gb.next_batch())
+    assert isinstance(out2, StepOutput)
+    assert out2.metrics["per_task_loss"].shape == (3,)
+    assert int(st2.step) == 1
+
+
+def test_registry_names():
+    assert set(available_models()) >= {"gfm-mtl", "gfm-baseline", "lm",
+                                       "lm-mtl"}
+    with pytest.raises(KeyError):
+        build_model("nope", _lm_cfg())
+
+
+# ---------------------------------------------------------------------------
+# gradient accumulation — the one wrapper, both paths
+# ---------------------------------------------------------------------------
+
+def test_grad_accum_lm_matches_full_batch():
+    cfg = _lm_cfg()
+    model = build_model("lm", cfg)
+    batch = {k: jnp.asarray(v) for k, v in
+             make_lm_sources(1, 8, 16, cfg.vocab)[0].items()}
+    opt = adamw(1e-2)
+    params = model.init(jax.random.PRNGKey(0))
+    plan = ShardingPlan(donate=False)
+    results = {}
+    for accum in (1, 4):
+        step = plan.compile(make_step(model, opt, plan, accum=accum))
+        s2, out = step(TrainState.create(params, opt), batch)
+        results[accum] = (float(out.loss), s2.params)
+    np.testing.assert_allclose(results[1][0], results[4][0], rtol=1e-6)
+    assert _max_err(results[1][1], results[4][1]) < 1e-4
+
+
+def test_grad_accum_multitask_matches_full_batch():
+    """Accumulation slices task-major batches along dim 1 (per-task batch),
+    never the task dim — exact parity for the multi-task LM."""
+    cfg = _lm_cfg(name="lmmt", n_tasks=3)
+    model = build_model("lm-mtl", cfg)
+    gb = GroupBatcher(make_lm_sources(3, 16, 16, cfg.vocab), 8)
+    batch = gb.next_batch()
+    opt = adamw(1e-2)
+    params = model.init(jax.random.PRNGKey(0))
+    plan = ShardingPlan(mtp=MTPConfig(n_tasks=3), donate=False)
+    results = {}
+    for accum in (1, 2):
+        step = plan.compile(make_step(model, opt, plan, accum=accum))
+        s2, out = step(TrainState.create(params, opt), batch)
+        results[accum] = (float(out.loss), s2.params)
+    np.testing.assert_allclose(results[1][0], results[2][0], rtol=1e-6)
+    assert _max_err(results[1][1], results[2][1]) < 1e-4
+
+
+def test_grad_accum_passes_low_rank_leaves_through():
+    """Task-major batches may carry leaves with no per-task batch dim (e.g.
+    stacked task weights (n_tasks,)); accumulation broadcasts them to every
+    microbatch instead of crashing on the missing axis."""
+    cfg = _lm_cfg(name="lmmt2", n_tasks=3)
+    model = build_model("lm-mtl", cfg)
+    gb = GroupBatcher(make_lm_sources(3, 16, 16, cfg.vocab), 8)
+    batch = dict(gb.next_batch(), task_w=jnp.ones((3,)))
+    opt = adamw(1e-2)
+    plan = ShardingPlan(mtp=MTPConfig(n_tasks=3), donate=False)
+    step = plan.compile(make_step(model, opt, plan, accum=2))
+    _, out = step(TrainState.create(model.init(jax.random.PRNGKey(0)), opt),
+                  batch)
+    assert np.isfinite(float(out.loss))
+
+
+def test_grad_accum_rejects_indivisible_batch():
+    def grad_fn(params, batch):
+        return jnp.zeros(()), {}, params
+    fn = with_grad_accum(grad_fn, 3)
+    with pytest.raises(AssertionError):
+        fn(jnp.zeros((2,)), {"x": jnp.zeros((8, 4))})
+
+
+# ---------------------------------------------------------------------------
+# batch_shardings ndim<2 regression (satellite)
+# ---------------------------------------------------------------------------
+
+def test_batch_shardings_low_rank_leaves():
+    """1-D per-task leaves (e.g. stacked task weights (n_tasks,)) and 0-D
+    scalars get rank-truncated specs instead of over-long ones."""
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh(1, 1)
+    batch = {"tokens": jnp.zeros((4, 8, 16), jnp.int32),
+             "energy": jnp.zeros((4, 8)),
+             "task_w": jnp.zeros((4,)),
+             "scalar": jnp.zeros(())}
+    for mode in ("par", "base"):
+        sh = batch_shardings(mesh, batch, MTPConfig(n_tasks=4, mode=mode))
+        for k, leaf in batch.items():
+            spec = sh[k].spec
+            assert len(spec) <= leaf.ndim, f"{mode}/{k}: spec {spec}"
+        assert sh["tokens"].spec == (
+            P("model", ("data",), None) if mode == "par"
+            else P(None, ("data", "model"), None))
+        assert sh["task_w"].spec == (P("model") if mode == "par" else P(None))
+        assert sh["scalar"].spec == P()
+        # the shardings must actually be usable for placement
+        jax.device_put(batch, sh)
+
+
+# ---------------------------------------------------------------------------
+# train_loop + early stopping on the validation metric (satellite)
+# ---------------------------------------------------------------------------
+
+def test_train_loop_early_stops_on_validation_metric():
+    """train_loop must feed the VALIDATION metric to EarlyStopping when
+    eval_fn provides one (paper §5.1), not the training loss."""
+    calls = []
+
+    def fake_step(state, batch):
+        # training loss keeps improving; validation plateaus immediately
+        return state._replace(step=state.step + 1), StepOutput(
+            loss=jnp.asarray(100.0 / (int(state.step) + 1)), metrics={})
+
+    def eval_fn(params):
+        calls.append(1)
+        return {"val_loss": 1.0}
+
+    state = TrainState(params={}, opt_state=None,
+                       step=jnp.zeros((), jnp.int32))
+    early = EarlyStopping(patience=3)
+    _, logger, _ = train_loop(fake_step, state, lambda: {}, steps=100,
+                              eval_fn=eval_fn, eval_every=1,
+                              early_stop=early, val_metric="val_loss")
+    # stopped by the flat val metric despite the improving train loss:
+    # first row sets best, then `patience` flat rows trigger the stop
+    assert len(logger.history) == early.patience + 1
+    assert early.bad >= early.patience
+
+
+def test_train_loop_falls_back_to_train_loss():
+    def fake_step(state, batch):
+        return state._replace(step=state.step + 1), StepOutput(
+            loss=jnp.asarray(1.0), metrics={})
+
+    state = TrainState(params={}, opt_state=None,
+                       step=jnp.zeros((), jnp.int32))
+    early = EarlyStopping(patience=2)
+    _, logger, _ = train_loop(fake_step, state, lambda: {}, steps=50,
+                              eval_every=1, early_stop=early)
+    assert len(logger.history) == early.patience + 1
+
+
+# ---------------------------------------------------------------------------
+# Session end to end
+# ---------------------------------------------------------------------------
+
+def test_session_gfm_end_to_end(tmp_path):
+    cfg = _gfm_cfg()
+    ckpt = str(tmp_path / "s.npz")
+    scfg = SessionConfig(model="gfm-mtl", arch=cfg, steps=6, batch_per_task=8,
+                         lr=3e-3, log_every=2, verbose=False, ckpt_path=ckpt,
+                         accum=2)
+    sess = Session.from_config(scfg, sources=_gfm_sources(),
+                               task_names=["a", "b", "c"])
+    res = sess.run()
+    assert np.isfinite(res.final_loss)
+    assert int(res.state.step) == 6
+    assert {"a", "b", "c"} <= set(res.logger.history[-1])
+    assert res.last_metrics["per_task_loss"].shape == (3,)
+    import os
+    assert os.path.exists(ckpt)
+    from repro.train import checkpoint
+    meta = checkpoint.load_metadata(ckpt)
+    assert meta["model"] == "gfm-mtl" and meta["step"] == 6
+
+
+def test_session_single_task_lm():
+    cfg = _lm_cfg()
+    scfg = SessionConfig(model="lm", arch=cfg, steps=3, batch_per_task=4,
+                         lr=1e-3, verbose=False)
+    res = Session.from_config(
+        scfg, sources=make_lm_sources(1, 16, 16, cfg.vocab)[0]).run()
+    assert np.isfinite(res.final_loss)
+    assert int(res.state.step) == 3
+
+
+def test_session_early_stops_on_eval(tmp_path):
+    cfg = _gfm_cfg()
+    scfg = SessionConfig(model="gfm-mtl", arch=cfg, steps=200,
+                         batch_per_task=8, lr=3e-3, eval_every=1,
+                         patience=2, verbose=False)
+    res = Session.from_config(scfg, sources=_gfm_sources(),
+                              eval_fn=lambda p: {"val_loss": 1.0}).run()
+    assert res.stopped_early
+    assert int(res.state.step) < 200
+
+
+# ---------------------------------------------------------------------------
+# config-driven kernel selection (satellite)
+# ---------------------------------------------------------------------------
+
+def test_segment_sum_impl_from_config():
+    """cfg.segment_sum_impl routes egnn_apply to the Pallas kernel without
+    call-site edits; both impls agree numerically."""
+    from repro.models import gnn
+    cfg = _gfm_cfg()
+    assert cfg.segment_sum_impl == "jnp"
+    data = generate_all(4, max_atoms=8, max_edges=24, sources=["ani1x"])
+    batch = to_batch_dict(data["ani1x"], np.arange(4))
+    params = gnn.egnn_init(jax.random.PRNGKey(0), cfg)
+    h_jnp = gnn.egnn_apply(params, batch, cfg=cfg)
+    cfg_pl = cfg.replace(segment_sum_impl="pallas")
+    h_pl = gnn.egnn_apply(params, batch, cfg=cfg_pl)
+    np.testing.assert_allclose(np.asarray(h_pl), np.asarray(h_jnp),
+                               atol=1e-5, rtol=1e-5)

@@ -13,9 +13,10 @@ import numpy as np
 import pytest
 
 from repro.configs.base import ArchConfig
-from repro.core import MTPConfig, make_gfm_mtl, make_mtp_train_step
+from repro.core import MTPConfig, make_gfm_mtl
 from repro.data.loader import GroupBatcher
 from repro.data.synthetic_atoms import generate_all
+from repro.engine import ShardingPlan, TrainState, make_step
 from repro.optim import adamw
 
 SOURCES3 = ["ani1x", "qm7x", "mptrj"]
@@ -46,16 +47,16 @@ def _sources(n=96, seed=0):
 
 
 def _train(model, n_tasks, sources, steps=300, batch=16, seed=0):
-    params = model.init(jax.random.PRNGKey(seed))
     opt = adamw(3e-3, grad_clip=1.0)
-    st = opt.init(params)
-    step = make_mtp_train_step(model, opt, MTPConfig(n_tasks=n_tasks))
+    plan = ShardingPlan(mtp=MTPConfig(n_tasks=n_tasks))
+    step = plan.compile(make_step(model, opt, plan))
+    state = TrainState.create(model.init(jax.random.PRNGKey(seed)), opt)
     gb = GroupBatcher(sources, batch, seed=seed)
     losses = []
     for _ in range(steps):
-        params, st, l, _ = step(params, st, gb.next_batch())
-        losses.append(float(l))
-    return params, losses
+        state, out = step(state, gb.next_batch())
+        losses.append(float(out.loss))
+    return state.params, losses
 
 
 def _probe_batch(sources):
@@ -125,14 +126,15 @@ def test_lm_multitask_end_to_end():
     gb = GroupBatcher(sources, 4)
     params = model.init(jax.random.PRNGKey(0))
     opt = adamw(1e-3)
-    st = opt.init(params)
-    step = make_mtp_train_step(model, opt, MTPConfig(n_tasks=3))
+    plan = ShardingPlan(mtp=MTPConfig(n_tasks=3))
+    step = plan.compile(make_step(model, opt, plan))
     p0 = jax.tree_util.tree_map(lambda x: x.copy(), params)
+    state = TrainState.create(params, opt)
     for _ in range(3):
-        params, st, l, m = step(params, st, gb.next_batch())
-        assert np.isfinite(float(l))
+        state, out = step(state, gb.next_batch())
+        assert np.isfinite(float(out.loss))
     dh = jax.tree_util.tree_map(lambda a, b: float(jnp.abs(a - b).max()),
-                                p0["heads"], params["heads"])
+                                p0["heads"], state.params["heads"])
     assert max(jax.tree_util.tree_leaves(dh)) > 0, "head params unchanged"
 
 
