@@ -51,12 +51,18 @@ def bench_segment_sum():
     msg = jax.random.normal(key, (B, E, F))
     dst = jax.random.randint(key, (B, E), 0, N)
     em = jnp.ones((B, E), bool)
-    onehot = jax.jit(lambda m, d: segment_sum_nodes(m, d, N, edge_mask=em))
+    onehot = jax.jit(lambda m, d: segment_sum_nodes(m, d, N, edge_mask=em,
+                                                    impl="jnp"))
+    scatter = jax.jit(lambda m, d: segment_sum_nodes(m, d, N, edge_mask=em,
+                                                     impl="scatter"))
     t = _time(onehot, msg, dst)
+    ts = _time(scatter, msg, dst)
     bn, be = 128, 256
     vmem = be * F * 4 + be * bn * 4 + bn * F * 4
     print(f"kernel_segment_sum_onehot,{t * 1e6:.0f},"
           f"E={E};pallas_vmem_bytes={vmem}")
+    print(f"kernel_segment_sum_scatter,{ts * 1e6:.0f},"
+          f"E={E};ratio={t / ts:.2f}x")
 
 
 def main():

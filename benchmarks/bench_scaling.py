@@ -1,5 +1,11 @@
 import os
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+import sys
+
+# the measured-only path needs just 8 host devices; the structural study
+# lowers compiled SPMD programs for up to 320 (must be set pre-jax-import)
+_DEVS = "8" if "--measured-only" in sys.argv else "512"
+os.environ.setdefault("XLA_FLAGS",
+                      f"--xla_force_host_platform_device_count={_DEVS}")
 
 """Figure 4 analogue: weak/strong scaling of MTL-par vs MTL-base.
 
@@ -12,12 +18,16 @@ programs at increasing device counts (paper layout: 5 sub-groups x M ranks):
   * resident parameter bytes per device (P_s + P_h vs P_s + N_h*P_h);
   * per-device FLOPs (work per rank).
 
-Plus a REAL wall-clock microbenchmark of par-vs-base on 8 host CPU devices.
+Plus a REAL wall-clock microbenchmark of par-vs-base on 8 host CPU devices,
+whose results land in BENCH_scaling.json at the repo root (the perf
+trajectory tracks the pjit par-vs-base speedup).
 
 Run as a subprocess (sets XLA device-count flag at import).
+``--measured-only`` skips the structural lowerings and emits only
+BENCH_scaling.json.
 """
+import argparse
 import json
-import sys
 import time
 
 import numpy as np
@@ -35,11 +45,12 @@ from repro.engine import ShardingPlan, TrainState, make_step
 from repro.launch.hlo_analysis import analyze_hlo
 from repro.optim import adamw
 
-N_TASKS = 5
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+N_TASKS = 5   # paper layout: 5 sub-groups; a default, not mutated state
 
 
-def _mesh(dp: int) -> Mesh:
-    devs = np.array(jax.devices()[: dp * N_TASKS]).reshape(dp, N_TASKS)
+def _mesh(dp: int, n_tasks: int) -> Mesh:
+    devs = np.array(jax.devices()[: dp * n_tasks]).reshape(dp, n_tasks)
     return Mesh(devs, ("data", "model"))
 
 
@@ -49,14 +60,15 @@ def _sds(shapes, shardings):
         shapes, shardings)
 
 
-def lower_gfm(dp: int, mode: str, batch_per_task: int, cfg):
-    mesh = _mesh(dp)
-    model = make_gfm_mtl(cfg, N_TASKS)
-    mtp = MTPConfig(n_tasks=N_TASKS, mode=mode)
+def lower_gfm(dp: int, mode: str, batch_per_task: int, cfg,
+              n_tasks: int = N_TASKS):
+    mesh = _mesh(dp, n_tasks)
+    model = make_gfm_mtl(cfg, n_tasks)
+    mtp = MTPConfig(n_tasks=n_tasks, mode=mode)
     opt = adamw(1e-3)
     plan = ShardingPlan(mesh=mesh, mtp=mtp)
     state_sds = plan.state_template(model.init, opt)
-    T, B, A, E = N_TASKS, batch_per_task, cfg.max_atoms, cfg.max_edges
+    T, B, A, E = n_tasks, batch_per_task, cfg.max_atoms, cfg.max_edges
     bshapes = {
         "species": jax.ShapeDtypeStruct((T, B, A), jnp.int32),
         "pos": jax.ShapeDtypeStruct((T, B, A, 3), jnp.float32),
@@ -82,11 +94,12 @@ def lower_gfm(dp: int, mode: str, batch_per_task: int, cfg):
                     continue
                 axes = entry if isinstance(entry, tuple) else (entry,)
                 for a in axes:
-                    denom *= dict(zip(("data", "model"), (dp, N_TASKS)))[a]
+                    denom *= dict(zip(("data", "model"), (dp, n_tasks)))[a]
             tot += n // max(denom, 1)
         return tot
     pb = shard_bytes(state_sds.params)
-    return {"devices": dp * N_TASKS, "mode": mode, "batch_per_task": batch_per_task,
+    return {"devices": dp * n_tasks, "n_tasks": n_tasks, "mode": mode,
+            "batch_per_task": batch_per_task,
             "coll_bytes_dev": h["collective_bytes"], "flops_dev": h["flops"],
             "param_bytes_dev": pb,
             "coll_detail": h["collectives"]}
@@ -103,38 +116,34 @@ def structural_scaling(cfg):
     return rows
 
 
-def measured_8dev(cfg, steps=12):
-    """Real wall-clock: par vs base on 8 host devices (2 data x 4 tasks)."""
-    global N_TASKS
-    saved = N_TASKS
-    N_TASKS = 4
-    try:
-        mesh = Mesh(np.array(jax.devices()[:8]).reshape(2, 4),
-                    ("data", "model"))
-        model = make_gfm_mtl(cfg, 4)
-        data = list(generate_all(64, max_atoms=cfg.max_atoms,
-                                 max_edges=cfg.max_edges).values())[:4]
-        bs = [to_batch_dict(sd, np.arange(32)) for sd in data]
-        batch = {k: jnp.stack([b[k] for b in bs]) for k in bs[0]}
-        out = {}
-        for mode in ("par", "base"):
-            mtp = MTPConfig(n_tasks=4, mode=mode)
-            opt = adamw(1e-3)
-            plan = ShardingPlan(mesh=mesh, mtp=mtp, donate=False)
-            step = plan.compile(make_step(model, opt, plan))
-            state = plan.shard_state(
-                TrainState.create(model.init(jax.random.PRNGKey(0)), opt))
-            b = plan.shard_batch(batch)
-            state, o = step(state, b)  # compile+warm
-            jax.block_until_ready(o.loss)
-            t0 = time.time()
-            for _ in range(steps):
-                state, o = step(state, b)
-            jax.block_until_ready(o.loss)
-            out[mode] = (time.time() - t0) / steps
-        return out
-    finally:
-        N_TASKS = saved
+def measured_8dev(cfg, steps=12, *, n_tasks=4, dp=2):
+    """Real wall-clock: par vs base on dp*n_tasks host devices (default
+    2 data x 4 tasks). Donation stays ON (the production configuration);
+    each mode gets a freshly created + sharded state, so nothing is reused
+    after being consumed."""
+    mesh = _mesh(dp, n_tasks)
+    model = make_gfm_mtl(cfg, n_tasks)
+    data = list(generate_all(64, max_atoms=cfg.max_atoms,
+                             max_edges=cfg.max_edges).values())[:n_tasks]
+    bs = [to_batch_dict(sd, np.arange(32)) for sd in data]
+    batch = {k: jnp.stack([b[k] for b in bs]) for k in bs[0]}
+    out = {}
+    for mode in ("par", "base"):
+        mtp = MTPConfig(n_tasks=n_tasks, mode=mode)
+        opt = adamw(1e-3)
+        plan = ShardingPlan(mesh=mesh, mtp=mtp)
+        step = plan.compile(make_step(model, opt, plan))
+        state = plan.shard_state(
+            TrainState.create(model.init(jax.random.PRNGKey(0)), opt))
+        b = plan.shard_batch(batch)
+        state, o = step(state, b)  # compile+warm (donates the fresh state)
+        jax.block_until_ready(o.loss)
+        t0 = time.time()
+        for _ in range(steps):
+            state, o = step(state, b)
+        jax.block_until_ready(o.loss)
+        out[mode] = (time.time() - t0) / steps
+    return out
 
 
 ALPHA = 1e-6   # per-hop collective latency (s) for the alpha-beta model
@@ -146,23 +155,54 @@ def coll_time_model(row):
     2*(g-1)/g * bytes/bw + (g-1)*alpha, with g = the reduction-group size
     (global for trunk/base, data-only for par heads — approximated by the
     dominant group)."""
-    g = row["devices"] if row["mode"] == "base" else row["devices"] // N_TASKS
+    g = row["devices"] if row["mode"] == "base" \
+        else row["devices"] // row["n_tasks"]
     b = row["coll_bytes_dev"]
     return 2 * (g - 1) / g * b / LINK + (g - 1) * ALPHA
 
 
-def main():
+def write_bench_scaling(wall: dict, *, n_tasks: int, dp: int, steps: int):
+    payload = {
+        "meta": {"benchmark": "bench_scaling/measured",
+                 "backend": jax.default_backend(), "jax": jax.__version__,
+                 "devices": dp * n_tasks, "mesh": [dp, n_tasks],
+                 "steps": steps},
+        "step_s": wall,
+        "speedup_par_vs_base": wall["base"] / wall["par"],
+    }
+    path = os.path.join(REPO_ROOT, "BENCH_scaling.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--measured-only", action="store_true",
+                    help="skip structural lowerings; emit BENCH_scaling.json")
+    args = ap.parse_args(argv)
     # paper-proportionate Case-2 ratio (section 4.3): N_h*P_h >> P_s
     # (paper: P_s ~ 9M EGNN vs 5 branches x ~3.3M heads)
     cfg = get_smoke("hydragnn-gfm").replace(gnn_hidden=64, head_hidden=256,
                                             head_layers=3, n_tasks=5,
                                             max_atoms=16, max_edges=96)
+    n_tasks, dp, steps = 4, 2, 12
+    wall = measured_8dev(cfg, steps, n_tasks=n_tasks, dp=dp)
+    print("name,us_per_call,derived")
+    print(f"fig4_measured_8dev,{wall['par'] * 1e6:.0f},"
+          f"par={wall['par']:.4f}s;base={wall['base']:.4f}s;"
+          f"speedup={wall['base'] / wall['par']:.2f}x")
+    if args.measured_only:
+        # the tracked trajectory artifact is only written from this mode:
+        # the full run times under a 512-virtual-device XLA host config,
+        # which is not comparable to the committed 8-device numbers
+        path = write_bench_scaling(wall, n_tasks=n_tasks, dp=dp, steps=steps)
+        print(f"# wrote {path}")
+        return
     rows = structural_scaling(cfg)
-    wall = measured_8dev(cfg)
     out = {"structural": rows, "measured_8dev_s": wall}
     os.makedirs("results", exist_ok=True)
     json.dump(out, open("results/scaling.json", "w"), indent=1)
-    print("name,us_per_call,derived")
     for r in rows:
         t = coll_time_model(r)
         print(f"fig4_{r['regime']}/{r['mode']}/dev{r['devices']},"
@@ -170,9 +210,6 @@ def main():
               f"coll_bytes={r['coll_bytes_dev']:.3e};"
               f"param_bytes={r['param_bytes_dev']:.3e};"
               f"flops={r['flops_dev']:.3e}")
-    print(f"fig4_measured_8dev,{wall['par'] * 1e6:.0f},"
-          f"par={wall['par']:.4f}s;base={wall['base']:.4f}s;"
-          f"speedup={wall['base'] / wall['par']:.2f}x")
 
 
 if __name__ == "__main__":

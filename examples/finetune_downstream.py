@@ -35,10 +35,14 @@ train = [dict(species=s.species, pos=s.pos, edge_src=s.edge_src,
               edge_dst=s.edge_dst, node_mask=s.node_mask,
               edge_mask=s.edge_mask, energy=s.energy, forces=s.forces)
          for s in data.values()]
-result = Session.from_config(
-    SessionConfig(model="gfm-mtl", arch=cfg, steps=STEPS_PT,
-                  batch_per_task=16, lr=3e-3, log_every=100, verbose=False),
-    sources=train, task_names=PRETRAIN_SOURCES).run()
+# the with-block stops the session's prefetcher thread before the
+# fine-tuning phase below takes over the process
+with Session.from_config(
+        SessionConfig(model="gfm-mtl", arch=cfg, steps=STEPS_PT,
+                      batch_per_task=16, lr=3e-3, log_every=100,
+                      verbose=False),
+        sources=train, task_names=PRETRAIN_SOURCES) as _sess:
+    result = _sess.run()
 print(f"pre-trained on {PRETRAIN_SOURCES}: final loss {result.final_loss:.4f}")
 
 # ---- downstream source (unseen fidelity, tiny dataset) ---------------------

@@ -34,6 +34,7 @@ session = Session.from_config(
     sources=sources,
     task_names=[f"corpus{t}" for t in range(args.tasks)])
 result = session.run()
+session.close()          # stop the background prefetcher
 
 pt = np.asarray(result.last_metrics["per_task_loss"])
 print(f"# spread across {args.tasks} conflicting corpora: "

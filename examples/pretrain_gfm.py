@@ -56,6 +56,7 @@ session = Session.from_config(
 print(f"# model: EGNN {cfg.gnn_layers}x{cfg.gnn_hidden} + "
       f"{len(names)} branches -> {session.n_params()/1e6:.1f}M params")
 result = session.run()
+session.close()          # stop the background prefetcher
 print(f"# final loss {result.final_loss:.4f} "
       f"(early stop: {result.stopped_early})")
 print(f"# checkpoint -> {args.ckpt}")

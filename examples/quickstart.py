@@ -31,6 +31,7 @@ session = Session.from_config(
                   lr=3e-3, log_every=25),
     sources=train, task_names=SOURCES)
 result = session.run()
+session.close()          # stop the background prefetcher
 params = result.params
 
 ev = gfm_eval_fn(cfg)

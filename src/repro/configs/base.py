@@ -77,10 +77,14 @@ class ArchConfig:
     max_atoms: int = 0
     max_edges: int = 0
     n_species: int = 0
-    # message-aggregation kernel: "jnp" (one-hot matmul, CPU default) or
-    # "pallas" (blocked mask-matmul MXU kernel). Plumbed through egnn_apply
-    # so the MTL model builders pick it up without call-site edits.
-    segment_sum_impl: str = "jnp"
+    # message-aggregation kernel, plumbed through egnn_apply so the MTL
+    # model builders pick it up without call-site edits:
+    #   "scatter" (default) — XLA scatter-add, O(E·F); fastest lowering
+    #   "jnp"               — one-hot einsum, O(E·A·F); parity oracle
+    #   "pallas"            — blocked mask-matmul MXU kernel (batched grid)
+    #   "fused"             — whole message hot path (gather → d² → φ_e →
+    #                         segment-sum) in one Pallas kernel
+    segment_sum_impl: str = "scatter"
     # precision / memory ---------------------------------------------------
     param_dtype: Any = jnp.float32
     compute_dtype: Any = jnp.bfloat16

@@ -1,2 +1,3 @@
-from . import lm_data, loader, synthetic_atoms  # noqa: F401
+from . import lm_data, loader, prefetch, synthetic_atoms  # noqa: F401
 from .loader import GroupBatcher  # noqa: F401
+from .prefetch import Prefetcher  # noqa: F401

@@ -7,6 +7,12 @@ from ITS dataset. Here the same contract is an in-memory, task-major batcher:
 row t drawn only from source t — exactly what the task-sharded train step
 expects (dim 0 -> task axis, dim 1 -> data axes).
 
+Batch assembly is pure NumPy (host-side indexing + ``np.stack``): no JAX
+dispatch, no host->device copies. Device placement belongs to the consumer
+(``plan.shard_batch`` / ``device_put``), which lets ``repro.data.prefetch``
+overlap the whole assemble+transfer chain with the running step instead of
+paying a synchronous per-key ``jnp.stack`` on the critical path.
+
 Epoch semantics: per-source shuffled cyclic iteration (sources of different
 sizes wrap independently — matching the paper's weak-scaling setup where all
 heads stay busy every step).
@@ -14,18 +20,24 @@ heads stay busy every step).
 from __future__ import annotations
 
 import numpy as np
-import jax.numpy as jnp
+
+
+def _source_len(s) -> int:
+    """Samples in a source: a dict of arrays, or any object with __len__
+    and ``gather(idx) -> dict`` (e.g. ``repro.data.store.ShardedSource``)."""
+    return len(s) if hasattr(s, "gather") else len(next(iter(s.values())))
 
 
 class GroupBatcher:
-    def __init__(self, sources: list[dict], batch_per_task: int, *, seed=0,
+    def __init__(self, sources: list, batch_per_task: int, *, seed=0,
                  drop_keys=()):
-        """sources: list of dicts of equal-structure numpy arrays, one dict
-        per task/source; every array's dim 0 is the sample dim."""
+        """sources: one per task/source — dicts of equal-structure numpy
+        arrays (dim 0 = sample dim) or gather-style readers (objects with
+        ``__len__`` and ``gather(idx) -> dict``, e.g. ``ShardedSource``)."""
         self.sources = sources
         self.B = batch_per_task
         self.rngs = [np.random.default_rng(seed + i) for i in range(len(sources))]
-        self.perm = [r.permutation(len(next(iter(s.values())))) for r, s in
+        self.perm = [r.permutation(_source_len(s)) for r, s in
                      zip(self.rngs, sources)]
         self.cursor = [0] * len(sources)
         self.drop = set(drop_keys)
@@ -48,11 +60,11 @@ class GroupBatcher:
         rows = []
         for t, s in enumerate(self.sources):
             idx = self._take(t)
-            rows.append({k: v[idx] for k, v in s.items() if k not in self.drop})
-        out = {}
-        for k in rows[0]:
-            out[k] = jnp.stack([jnp.asarray(r[k]) for r in rows], axis=0)
-        return out
+            row = s.gather(idx) if hasattr(s, "gather") else \
+                {k: v[idx] for k, v in s.items()}
+            rows.append({k: v for k, v in row.items() if k not in self.drop})
+        return {k: np.stack([np.asarray(r[k]) for r in rows], axis=0)
+                for k in rows[0]}
 
 
 class SingleBatcher:
@@ -67,4 +79,4 @@ class SingleBatcher:
 
     def next_batch(self) -> dict:
         idx = self.rng.integers(0, self.n, self.B)
-        return {k: jnp.asarray(v[idx]) for k, v in self.source.items()}
+        return {k: np.asarray(v[idx]) for k, v in self.source.items()}

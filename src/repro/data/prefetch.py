@@ -1,0 +1,120 @@
+"""Async double-buffered input pipeline.
+
+``GroupBatcher``/``SingleBatcher`` assemble batches on the host (NumPy
+indexing + stacking) and the training loop then pays ``shard_batch`` /
+``device_put`` before every step — all serialized with the running step, so
+the accelerator idles between steps. ``Prefetcher`` moves that whole chain
+onto a background thread with a bounded queue (default depth 2 — classic
+double buffering: one batch in flight to the device while the step consumes
+the previous one). JAX dispatch is thread-safe and ``device_put`` is async,
+so the H2D copy overlaps the running step's compute.
+
+This is the generic, batcher-agnostic layer of the DDStore latency-hiding
+role (``repro.data.store.PrefetchingBatcher`` is the shard-store-specific
+sibling that prefetches filesystem reads).
+
+Determinism: the producer thread is the only caller of
+``batcher.next_batch``, so the batch stream is byte-identical to the
+synchronous path (tests/test_prefetch.py asserts this) — prefetching changes
+when batches are built, never which. One caveat: ``close()`` discards the
+(up to ``depth``+1) batches the producer has already drawn, advancing the
+wrapped batcher past what the consumer saw — so hold ONE Prefetcher for the
+batcher's whole lifetime instead of re-wrapping per loop (``Session`` keeps
+its prefetcher across ``run()`` calls for exactly this reason; queued
+batches are simply consumed by the next run).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+
+
+class Prefetcher:
+    """Wrap any batcher (the ``next_batch()`` contract) with a depth-``depth``
+    background producer.
+
+    transform: optional callable applied to each batch ON THE PRODUCER
+    THREAD — pass ``plan.shard_batch`` (or ``jax.device_put``) so host->
+    device transfer overlaps the running step.
+
+    Exceptions in the producer (including inside ``transform``) are captured
+    and re-raised from ``next_batch()``. Use as a context manager or call
+    ``close()`` to stop the producer; extra batches already in the queue are
+    discarded."""
+
+    _DONE = object()   # queued after a producer exception
+
+    def __init__(self, batcher, *, transform=None, depth: int = 2):
+        assert depth >= 1, f"prefetch depth must be >= 1, got {depth}"
+        self.batcher = batcher
+        self.transform = transform
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._err: BaseException | None = None
+        self._stop = threading.Event()
+        self._thread = threading.Thread(
+            target=self._produce, name="prefetcher", daemon=True)
+        self._thread.start()
+
+    def _put(self, item) -> bool:
+        """Blocking put that stays responsive to close(); False if stopped."""
+        while not self._stop.is_set():
+            try:
+                self._q.put(item, timeout=0.1)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def _produce(self):
+        try:
+            while not self._stop.is_set():
+                b = self.batcher.next_batch()
+                if self.transform is not None:
+                    b = self.transform(b)
+                self._put(b)
+        except BaseException as e:  # propagate to the consumer
+            self._err = e
+            self._put(self._DONE)
+
+    def next_batch(self):
+        if self._err is not None and self._q.empty():
+            raise self._err          # producer already died; don't block
+        if self._stop.is_set():      # closed: drain or raise, never hang
+            try:
+                item = self._q.get_nowait()
+            except queue.Empty:
+                raise RuntimeError("Prefetcher is closed") from self._err
+        else:
+            item = self._q.get()
+        if item is self._DONE:
+            self._stop.set()
+            raise self._err
+        return item
+
+    # iterator protocol, so a Prefetcher drops into train_loop(batches=...)
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        return self.next_batch()
+
+    def close(self):
+        """Stop the producer and discard queued batches. Idempotent."""
+        self._stop.set()
+        # unblock a producer stuck in _put, then drain — twice: the first
+        # drain can free a slot that the producer's in-flight put fills
+        # before it observes _stop, so drain again after the join
+        for _ in range(2):
+            try:
+                while True:
+                    self._q.get_nowait()
+            except queue.Empty:
+                pass
+            self._thread.join(timeout=5.0)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

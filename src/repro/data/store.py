@@ -22,10 +22,11 @@ from __future__ import annotations
 
 import json
 import os
-import queue
-import threading
 
 import numpy as np
+
+from .loader import GroupBatcher
+from .prefetch import Prefetcher
 
 
 def write_store(path: str, arrays: dict[str, np.ndarray], *,
@@ -94,8 +95,11 @@ class ShardedSource:
         return res
 
 
-class PrefetchingBatcher:
-    """Group-aware batcher over ShardedSources with background prefetch.
+class PrefetchingBatcher(Prefetcher):
+    """Group-aware batcher over ShardedSources with background prefetch:
+    a ``GroupBatcher`` (which accepts gather-style sources) composed with
+    the generic ``repro.data.prefetch.Prefetcher`` — one thread-lifecycle
+    implementation, DDStore's latency-hiding role.
 
     Matches GroupBatcher's contract: ``next_batch()`` -> task-major numpy
     dict, row t drawn only from source t."""
@@ -103,47 +107,5 @@ class PrefetchingBatcher:
     def __init__(self, sources: list[ShardedSource], batch_per_task: int,
                  *, seed: int = 0, depth: int = 1):
         self.sources = sources
-        self.B = batch_per_task
-        self.rngs = [np.random.default_rng(seed + i)
-                     for i in range(len(sources))]
-        self.perm = [r.permutation(len(s)) for r, s in zip(self.rngs, sources)]
-        self.cursor = [0] * len(sources)
-        self._q: queue.Queue = queue.Queue(maxsize=depth)
-        self._stop = threading.Event()
-        self._thread = threading.Thread(target=self._producer, daemon=True)
-        self._thread.start()
-
-    def _take(self, t: int) -> np.ndarray:
-        n = len(self.perm[t])
-        idx, c = [], self.cursor[t]
-        while len(idx) < self.B:
-            take = min(self.B - len(idx), n - c)
-            idx.extend(self.perm[t][c: c + take])
-            c += take
-            if c >= n:
-                self.perm[t] = self.rngs[t].permutation(n)
-                c = 0
-        self.cursor[t] = c
-        return np.asarray(idx)
-
-    def _assemble(self) -> dict:
-        rows = [s.gather(self._take(t)) for t, s in enumerate(self.sources)]
-        return {k: np.stack([r[k] for r in rows]) for k in rows[0]}
-
-    def _producer(self):
-        while not self._stop.is_set():
-            try:
-                self._q.put(self._assemble(), timeout=0.5)
-            except queue.Full:
-                continue
-
-    def next_batch(self) -> dict:
-        return self._q.get()
-
-    def close(self):
-        self._stop.set()
-        try:
-            while True:
-                self._q.get_nowait()
-        except queue.Empty:
-            pass
+        super().__init__(GroupBatcher(sources, batch_per_task, seed=seed),
+                         depth=depth)

@@ -17,6 +17,15 @@ Lower-level pieces (all public):
   * ``ShardingPlan`` — mesh + MTPConfig + backend choice behind one
     ``plan.compile(step)`` call (jit / pjit / shard_map);
   * ``build_model`` / ``register_model`` — the model registry.
+
+Performance knobs a session picks up from its configs:
+
+  * ``ArchConfig.segment_sum_impl`` — GNN message-aggregation kernel:
+    ``"scatter"`` (default) | ``"jnp"`` | ``"pallas"`` | ``"fused"``
+    (see ``repro.models.gnn``);
+  * ``SessionConfig.prefetch`` (default on) — async double-buffered input
+    pipeline: batch assembly and device placement run on a background
+    thread and overlap the running step (``repro.data.prefetch``).
 """
 from .state import StepOutput, TrainState  # noqa: F401
 from .step import (SingleTaskModel, TrainStep, make_grad_fn,  # noqa: F401

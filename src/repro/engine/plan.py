@@ -102,8 +102,12 @@ class ShardingPlan:
         return jax.device_put(state, self.state_shardings(state))
 
     def shard_batch(self, batch):
+        """Device placement for a host batch. With a mesh: NamedSharding
+        placement. Without: plain default-device put — loaders return host
+        NumPy, and an explicit put here (e.g. on the prefetch thread) keeps
+        the H2D copy off the step's critical path."""
         if self.mesh is None:
-            return batch
+            return jax.device_put(batch)
         return jax.device_put(batch, self.data_batch_shardings(batch))
 
     # -- dry-run templates -------------------------------------------------

@@ -2,8 +2,10 @@
 
 ``Session.from_config(cfg, sources=...).run()`` composes everything one used
 to hand-wire per entry point: model registry, ``GroupBatcher``/
-``SingleBatcher`` data feeding, AdamW + schedule, ``ShardingPlan`` (mesh /
-MTP mode / backend), gradient accumulation, ``EarlyStopping``,
+``SingleBatcher`` data feeding with async double-buffered prefetch
+(``SessionConfig.prefetch``, default on — batch assembly and H2D transfer
+overlap the running step), AdamW + schedule, ``ShardingPlan`` (mesh / MTP
+mode / backend), gradient accumulation, ``EarlyStopping``,
 ``MetricLogger``, eval and checkpointing — then runs the unified train loop
 and returns a ``SessionResult``.
 """
@@ -48,6 +50,13 @@ class SessionConfig:
     patience: int = 0                 # >0 => early stopping
     min_delta: float = 1e-4
     val_metric: str = "val_loss"      # row key EarlyStopping watches
+    # input pipeline: assemble + device-place batches on a background
+    # thread (repro.data.prefetch.Prefetcher, depth-2 double buffering) so
+    # host-side batching and H2D transfer overlap the running step. The
+    # batch STREAM is identical either way — prefetch changes when batches
+    # are built, never which.
+    prefetch: bool = True
+    prefetch_depth: int = 2
     # misc
     seed: int = 0
     task_weights: tuple | None = None
@@ -148,6 +157,10 @@ class Session:
         state = TrainState.create(params, self.optimizer,
                                   rng=jax.random.PRNGKey(cfg.seed + 1))
         self.state = self.plan.shard_state(state)
+        # ONE prefetcher for the session's lifetime (created on first run):
+        # closing it between runs would discard already-drawn batches and
+        # silently shift the batcher's stream vs the synchronous path
+        self._prefetcher = None
 
     @classmethod
     def from_config(cls, cfg: SessionConfig, **kw) -> "Session":
@@ -156,6 +169,22 @@ class Session:
     def n_params(self) -> int:
         return sum(int(x.size) for x in
                    jax.tree_util.tree_leaves(self.state.params))
+
+    def close(self):
+        """Stop the background prefetcher (if any). The session stays
+        usable — the next run() recreates it — but batches the producer had
+        already drawn are discarded, so only close when done with the
+        session."""
+        if self._prefetcher is not None:
+            self._prefetcher.close()
+            self._prefetcher = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
 
     def _metric_fn(self, out) -> dict:
         m = out.metrics
@@ -171,9 +200,20 @@ class Session:
         early = EarlyStopping(patience=cfg.patience,
                               min_delta=cfg.min_delta) \
             if cfg.patience > 0 else None
+        # device placement runs with the batcher: on the prefetch thread it
+        # overlaps the running step (async input pipeline), synchronously it
+        # is simply the old ``shard_batch(next_batch())`` critical path
+        place = self.plan.shard_batch
+        if cfg.prefetch:
+            if self._prefetcher is None:
+                from repro.data.prefetch import Prefetcher
+                self._prefetcher = Prefetcher(self.batcher, transform=place,
+                                              depth=cfg.prefetch_depth)
+            batches = self._prefetcher.next_batch
+        else:
+            batches = lambda: place(self.batcher.next_batch())  # noqa: E731
         state, logger, last_out = train_loop(
-            self.compiled_step, self.state,
-            lambda: self.plan.shard_batch(self.batcher.next_batch()),
+            self.compiled_step, self.state, batches,
             steps=cfg.steps, eval_fn=self.eval_fn,
             eval_every=cfg.eval_every, log_every=cfg.log_every,
             early_stop=early, val_metric=cfg.val_metric,

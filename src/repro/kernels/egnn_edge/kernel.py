@@ -1,0 +1,125 @@
+"""Fused EGNN edge-message Pallas kernel.
+
+One ``pallas_call`` computes, per edge block, the whole EGNN message hot
+path that ``egnn_apply`` otherwise lowers as five separate HBM-bound ops:
+
+    gather(h_i, h_j, x_i, x_j) -> d² -> φ_e MLP (2 dense + SiLU)
+        -> masked segment-sum into node rows
+
+Nothing edge-major ever round-trips to HBM: the ``(BE, 2H+1)`` concat input
+of φ_e is never materialized (the first dense layer's weight is split into
+its ``h_i`` / ``h_j`` / ``d²`` row blocks, so the concat-matmul becomes a sum
+of three small matmuls), and the aggregation happens tile-by-tile in VMEM
+via the membership-matmul trick of ``repro.kernels.segment_sum`` — no
+``(B, E, A)`` one-hot tensor at the XLA level.
+
+Grid: (B, num_edge_blocks) — edge blocks are the sequential inner dim; a
+VMEM f32 scratch holds the whole (A, H) node accumulator per graph (A is
+small in this workload: padded structures, not monolithic graphs) and is
+flushed on the last edge block.
+
+VMEM budget at A=128, H=866, BE=256 (f32): node features 433 KiB, messages
+866 KiB, membership tile 128 KiB, accumulator 433 KiB, φ_e weights ≈5.9 MiB
+(2·H·H + H rows) — ≈7.8 MiB resident, within the ~16 MiB/core budget. For
+H beyond ~1k the first dense's weight blocks would need a K-grid dimension.
+
+Masked/pad edges arrive with ``dst >= A`` (routed by ``ops.egnn_edge_agg``)
+and are excluded from the membership tile; their gather indices are clamped
+so the loads stay in bounds.
+
+``interpret=None`` auto-detects the backend (compiled on TPU, interpreter
+mode elsewhere — CPU CI validates numerics, not timing).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.segment_sum.kernel import resolve_interpret
+
+
+def _edge_kernel(src_ref, dst_ref, h_ref, pos_ref, w0i_ref, w0j_ref, w0d_ref,
+                 b0_ref, w1_ref, b1_ref, o_ref, acc_ref, *, ne):
+    je = pl.program_id(1)   # edge block (sequential)
+
+    @pl.when(je == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    src = src_ref[0]                      # (BE,) int32, >= A marks pad
+    dst = dst_ref[0]
+    h = h_ref[0]                          # (A, H) compute dtype
+    pos = pos_ref[0].astype(jnp.float32)  # (A, 3)
+    A = h.shape[0]
+    cd = h.dtype
+
+    # clamped gathers (pad edges load row A-1; masked out of the sum below)
+    sc = jnp.minimum(src, A - 1)
+    dc = jnp.minimum(dst, A - 1)
+    hi = jnp.take(h, sc, axis=0)          # (BE, H)
+    hj = jnp.take(h, dc, axis=0)
+    xi = jnp.take(pos, sc, axis=0)        # (BE, 3)
+    xj = jnp.take(pos, dc, axis=0)
+    d2 = jnp.sum((xi - xj) ** 2, axis=-1, keepdims=True).astype(cd)  # (BE,1)
+
+    # φ_e fc0 over the *virtual* concat [hi | hj | d2]: the weight arrives
+    # pre-split into its three row blocks, so no (BE, 2H+1) tensor exists
+    z = (hi @ w0i_ref[...] + hj @ w0j_ref[...]
+         + d2 * w0d_ref[...] + b0_ref[...])
+    m = jax.nn.silu(z) @ w1_ref[...] + b1_ref[...]        # (BE, H)
+
+    # masked membership matmul (MXU): pad edges contribute zero columns
+    valid = dst < A
+    node_ids = jax.lax.broadcasted_iota(jnp.int32, (dst.shape[0], A), 1)
+    onehot = jnp.where(valid[:, None],
+                       (dst[:, None] == node_ids).astype(jnp.float32), 0.0)
+    acc_ref[...] += jax.lax.dot_general(
+        onehot, m.astype(jnp.float32), (((0,), (0,)), ((), ())))
+
+    @pl.when(je == ne - 1)
+    def _flush():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_e", "interpret"))
+def egnn_edge_fused(h, pos, src, dst, w0i, w0j, w0d, b0, w1, b1, *,
+                    block_e=256, interpret=None):
+    """Fused forward. h: (B, A, H) compute-dtype node features; pos:
+    (B, A, 3); src/dst: (B, E) int32 with >= A marking masked/pad edges
+    (route them before calling — see ``ops.egnn_edge_agg``); φ_e fc0 weight
+    pre-split into w0i (H,H), w0j (H,H), w0d (1,H), plus b0 (1,H), fc1
+    w1 (H,H), b1 (1,H). Returns (B, A, H) aggregated messages."""
+    B, A, H = h.shape
+    E = src.shape[1]
+    be = min(block_e, E)
+    ne = -(-E // be)
+    if ne * be != E:
+        pe = ne * be - E
+        # pad sentinel A: matches no node id, contributes nothing
+        src = jnp.pad(src, ((0, 0), (0, pe)), constant_values=A)
+        dst = jnp.pad(dst, ((0, 0), (0, pe)), constant_values=A)
+    src = src.astype(jnp.int32)
+    dst = dst.astype(jnp.int32)
+
+    kern = functools.partial(_edge_kernel, ne=ne)
+    full = lambda s: pl.BlockSpec(s, lambda b, je: (0,) * len(s))
+    return pl.pallas_call(
+        kern,
+        grid=(B, ne),
+        in_specs=[
+            pl.BlockSpec((1, be), lambda b, je: (b, je)),      # src
+            pl.BlockSpec((1, be), lambda b, je: (b, je)),      # dst
+            pl.BlockSpec((1, A, H), lambda b, je: (b, 0, 0)),  # h
+            pl.BlockSpec((1, A, 3), lambda b, je: (b, 0, 0)),  # pos
+            full(w0i.shape), full(w0j.shape), full(w0d.shape),
+            full(b0.shape), full(w1.shape), full(b1.shape),
+        ],
+        out_specs=pl.BlockSpec((1, A, H), lambda b, je: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, A, H), h.dtype),
+        scratch_shapes=[pltpu.VMEM((A, H), jnp.float32)],
+        interpret=resolve_interpret(interpret),
+    )(src, dst, h, pos, w0i, w0j, w0d, b0, w1, b1)

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the fused EGNN edge kernel.
+
+Exactly the unfused message hot path of ``repro.models.gnn.egnn_apply``
+(gather -> d² -> φ_e via ``mlp_apply`` on the materialized concat ->
+scatter segment-sum), so kernel-vs-ref parity is also kernel-vs-model
+parity."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.mlp import mlp_apply
+
+
+def egnn_edge_agg_ref(h, pos, src, dst, edge_mask, phi_e, *,
+                      compute_dtype=None):
+    """h: (B, A, H); pos: (B, A, 3); src/dst: (B, E); edge_mask: (B, E);
+    phi_e: 2-layer MLP params ({"fc0": {w,b}, "fc1": {w,b}}).
+    Returns (B, A, H) aggregated messages."""
+    cd = compute_dtype or h.dtype
+    B, A, H = h.shape
+
+    def gather(x, idx):
+        return jnp.take_along_axis(x, idx[..., None], axis=1)
+
+    sc = jnp.minimum(src, A - 1)
+    dc = jnp.minimum(dst, A - 1)
+    hi = gather(h, sc)
+    hj = gather(h, dc)
+    xi = gather(pos.astype(jnp.float32), sc)
+    xj = gather(pos.astype(jnp.float32), dc)
+    d2 = jnp.sum((xi - xj) ** 2, -1, keepdims=True).astype(cd)
+    m = mlp_apply(phi_e, jnp.concatenate([hi, hj, d2], -1), "silu", cd)
+    m = jnp.where(edge_mask[..., None], m, 0.0)
+    d = jnp.where(edge_mask, dst, A)
+    out = jnp.zeros((B, A, H), m.dtype)
+    return out.at[jnp.arange(B)[:, None], d].add(m, mode="drop")

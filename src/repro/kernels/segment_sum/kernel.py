@@ -5,13 +5,35 @@ operation is re-thought for the MXU (the DESIGN.md "adapt, don't port" item):
 tile (edges x nodes), build the one-hot membership tile in VMEM from the
 destination-index block, and accumulate ``one_hotᵀ @ messages`` as a matmul.
 
+Two entry points:
+
+  * ``segment_sum_2d``      — one graph: (E, F) messages -> (n_nodes, F);
+  * ``segment_sum_batched`` — padded graph batches: (B, E, F) -> (B, A, F)
+    with the batch as the leading (parallel) grid dimension. This is what
+    ``repro.models.gnn.segment_sum_nodes`` feeds; it replaces the old
+    ``vmap(segment_sum_2d)`` lowering, which re-traced the kernel under the
+    batching rule instead of expressing B as a grid axis.
+
 Grid: (num_node_blocks, num_edge_blocks) — edge blocks are the sequential
 inner dim; a VMEM f32 scratch accumulates the (BN, F) node tile and is
-flushed on the last edge block.
+flushed on the last edge block. The batched kernel prepends B to the grid.
+
+Pad-edge sentinel contract: edges whose destination must not contribute
+(ragged-E padding added here, or masked edges routed by ``ops.segment_sum``)
+carry a ``dst`` value ``>= n_nodes``. The kernel compares ``dst`` against
+node ids ``0 .. num_node_blocks*BN - 1``; because the output is padded up to
+``num_node_blocks*BN >= n_nodes`` rows and then sliced back to ``n_nodes``,
+any ``dst`` in ``[n_nodes, num_node_blocks*BN)`` lands on a padded row that
+is discarded, and any ``dst >= num_node_blocks*BN`` matches no row at all.
+The internal ragged-E pad sentinel is ``num_node_blocks*BN + 1`` — strictly
+above every node id a tile can generate (asserted below, not assumed).
 
 VMEM budget at BN=128, BE=256, F=896: membership tile (256x128 f32) 128 KiB,
 message tile (256x896 f32) 896 KiB, accumulator (128x896 f32) 448 KiB —
 ≈1.5 MiB resident.
+
+``interpret=None`` (the default) auto-detects: the kernel runs compiled on
+TPU backends and falls back to interpreter mode everywhere else (CPU CI).
 """
 from __future__ import annotations
 
@@ -23,6 +45,42 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
+def resolve_interpret(interpret) -> bool:
+    """None -> interpret only off-TPU (compiled Mosaic path on TPU)."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
+
+
+def _block_geometry(n_nodes: int, E: int, block_n: int, block_e: int):
+    """Clamp block sizes to the problem (explicitly — a ``block_n`` larger
+    than ``n_nodes`` would otherwise pad every node tile with dead rows, and
+    a ``block_e`` larger than ``E`` would pad every edge tile) and derive
+    block counts + the ragged-E pad sentinel."""
+    if block_n < 1 or block_e < 1:
+        raise ValueError(f"block sizes must be >= 1, got block_n={block_n}, "
+                         f"block_e={block_e}")
+    bn = min(block_n, n_nodes)
+    be = min(block_e, E)
+    nb, ne = -(-n_nodes // bn), -(-E // be)
+    sentinel = nb * bn + 1
+    # the one-hot tile compares dst against node ids 0 .. nb*bn - 1; the
+    # sentinel must exceed ALL of them or a pad edge would alias a real node
+    assert sentinel > nb * bn - 1 and nb * bn >= n_nodes, \
+        (sentinel, nb, bn, n_nodes)
+    return bn, be, nb, ne, sentinel
+
+
+def _accumulate_tile(dst, msg, acc_ref, *, ib, bn):
+    """One (edge-block x node-block) tile: membership one-hot as an MXU
+    matmul, accumulated into the f32 scratch."""
+    node_ids = ib * bn + jax.lax.broadcasted_iota(
+        jnp.int32, (dst.shape[0], bn), 1)
+    onehot = (dst[:, None] == node_ids).astype(jnp.float32)   # (BE, BN)
+    acc_ref[...] += jax.lax.dot_general(
+        onehot, msg, (((0,), (0,)), ((), ())))
+
+
 def _ss_kernel(dst_ref, msg_ref, o_ref, acc_ref, *, bn, ne):
     ib = pl.program_id(0)   # node block
     je = pl.program_id(1)   # edge block (sequential)
@@ -31,11 +89,8 @@ def _ss_kernel(dst_ref, msg_ref, o_ref, acc_ref, *, bn, ne):
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    dst = dst_ref[...]                                   # (BE,) int32
-    msg = msg_ref[...].astype(jnp.float32)               # (BE, F)
-    node_ids = ib * bn + jax.lax.broadcasted_iota(jnp.int32, (dst.shape[0], bn), 1)
-    onehot = (dst[:, None] == node_ids).astype(jnp.float32)   # (BE, BN)
-    acc_ref[...] += jax.lax.dot_general(onehot, msg, (((0,), (0,)), ((), ())))
+    _accumulate_tile(dst_ref[...], msg_ref[...].astype(jnp.float32),
+                     acc_ref, ib=ib, bn=bn)
 
     @pl.when(je == ne - 1)
     def _flush():
@@ -45,17 +100,16 @@ def _ss_kernel(dst_ref, msg_ref, o_ref, acc_ref, *, bn, ne):
 @functools.partial(jax.jit, static_argnames=("n_nodes", "block_n", "block_e",
                                              "interpret"))
 def segment_sum_2d(messages, dst, n_nodes: int, *, block_n=128, block_e=256,
-                   interpret=True):
+                   interpret=None):
     """messages: (E, F); dst: (E,) int32 in [0, n_nodes) or >= n_nodes for
-    masked/pad edges. Returns (n_nodes, F)."""
+    masked/pad edges (see the sentinel contract in the module docstring).
+    Returns (n_nodes, F)."""
     E, F = messages.shape
-    bn = min(block_n, n_nodes)
-    be = min(block_e, E)
-    nb, ne = -(-n_nodes // bn), -(-E // be)
+    bn, be, nb, ne, sentinel = _block_geometry(n_nodes, E, block_n, block_e)
     if ne * be != E:
         pe = ne * be - E
         messages = jnp.pad(messages, ((0, pe), (0, 0)))
-        dst = jnp.pad(dst, (0, pe), constant_values=nb * bn + 1)
+        dst = jnp.pad(dst, (0, pe), constant_values=sentinel)
     dst = dst.astype(jnp.int32)
 
     kern = functools.partial(_ss_kernel, bn=bn, ne=ne)
@@ -69,6 +123,54 @@ def segment_sum_2d(messages, dst, n_nodes: int, *, block_n=128, block_e=256,
         out_specs=pl.BlockSpec((bn, F), lambda ib, je: (ib, 0)),
         out_shape=jax.ShapeDtypeStruct((nb * bn, F), messages.dtype),
         scratch_shapes=[pltpu.VMEM((bn, F), jnp.float32)],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(dst, messages)
     return out[:n_nodes]
+
+
+def _ss_batched_kernel(dst_ref, msg_ref, o_ref, acc_ref, *, bn, ne):
+    ib = pl.program_id(1)   # node block
+    je = pl.program_id(2)   # edge block (sequential inner dim)
+
+    @pl.when(je == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    _accumulate_tile(dst_ref[0], msg_ref[0].astype(jnp.float32),
+                     acc_ref, ib=ib, bn=bn)
+
+    @pl.when(je == ne - 1)
+    def _flush():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n_nodes", "block_n", "block_e",
+                                             "interpret"))
+def segment_sum_batched(messages, dst, n_nodes: int, *, block_n=128,
+                        block_e=256, interpret=None):
+    """messages: (B, E, F); dst: (B, E) int32 in [0, n_nodes) or >= n_nodes
+    for masked/pad edges. Returns (B, n_nodes, F). B is the leading
+    (parallel) grid dimension — each graph reuses the same node/edge tiling
+    as ``segment_sum_2d``."""
+    B, E, F = messages.shape
+    bn, be, nb, ne, sentinel = _block_geometry(n_nodes, E, block_n, block_e)
+    if ne * be != E:
+        pe = ne * be - E
+        messages = jnp.pad(messages, ((0, 0), (0, pe), (0, 0)))
+        dst = jnp.pad(dst, ((0, 0), (0, pe)), constant_values=sentinel)
+    dst = dst.astype(jnp.int32)
+
+    kern = functools.partial(_ss_batched_kernel, bn=bn, ne=ne)
+    out = pl.pallas_call(
+        kern,
+        grid=(B, nb, ne),
+        in_specs=[
+            pl.BlockSpec((1, be), lambda b, ib, je: (b, je)),
+            pl.BlockSpec((1, be, F), lambda b, ib, je: (b, je, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bn, F), lambda b, ib, je: (b, ib, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, nb * bn, F), messages.dtype),
+        scratch_shapes=[pltpu.VMEM((bn, F), jnp.float32)],
+        interpret=resolve_interpret(interpret),
+    )(dst, messages)
+    return out[:, :n_nodes]

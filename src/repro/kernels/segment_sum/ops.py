@@ -1,18 +1,32 @@
-"""jit'd public wrapper for batched graph segment-sum."""
+"""jit'd public wrapper for graph segment-sum (batched or single-graph).
+
+Batched ``(B, E, F)`` input goes through ``segment_sum_batched`` (B as a
+leading grid dimension); unbatched ``(E, F)`` input through
+``segment_sum_2d``. Masked edges are routed to an out-of-range destination
+sentinel so they contribute nothing (the kernel's pad-sentinel contract —
+see ``kernel.py``). ``interpret=None`` auto-detects the backend: compiled on
+TPU, interpreter mode elsewhere.
+"""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
-from .kernel import segment_sum_2d
+from .kernel import segment_sum_2d, segment_sum_batched
 
 
 def segment_sum(messages, dst, n_nodes: int, *, edge_mask=None,
-                block_n=128, block_e=256, interpret=True):
-    """messages: (B,E,F); dst: (B,E) -> (B,n_nodes,F). Masked edges are
-    routed to an out-of-range sentinel so they contribute nothing."""
+                block_n=128, block_e=256, interpret=None):
+    """messages: (B,E,F) or (E,F); dst: (B,E) or (E,) -> (B,n_nodes,F) or
+    (n_nodes,F)."""
     if edge_mask is not None:
-        dst = jnp.where(edge_mask, dst, n_nodes + 1)
-    fn = lambda m, d: segment_sum_2d(m, d, n_nodes, block_n=block_n,
-                                     block_e=block_e, interpret=interpret)
-    return jax.vmap(fn)(messages, dst)
+        # n_nodes is >= every valid id and lands on a discarded padded row
+        # (or matches nothing) inside the kernel — see sentinel contract
+        dst = jnp.where(edge_mask, dst, n_nodes)
+    if messages.ndim == 3:
+        return segment_sum_batched(messages, dst, n_nodes, block_n=block_n,
+                                   block_e=block_e, interpret=interpret)
+    if messages.ndim == 2:
+        return segment_sum_2d(messages, dst, n_nodes, block_n=block_n,
+                              block_e=block_e, interpret=interpret)
+    raise ValueError(f"messages must be (E,F) or (B,E,F), got "
+                     f"ndim={messages.ndim}")

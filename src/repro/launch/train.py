@@ -73,7 +73,8 @@ def main():
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
-    result = session_for(args).run()
+    with session_for(args) as session:
+        result = session.run()
     return result.final_loss
 
 

@@ -11,9 +11,19 @@ shape, rather than partitioning one monolithic graph):
   node_mask:  (B, A)    bool
   edge_mask:  (B, E)    bool
 
-Message aggregation is a segment-sum — the MPNN hot spot. The Pallas kernel
-(`repro.kernels.segment_sum`) implements it as a blocked mask-matmul for the
-MXU; the jnp path uses one-hot matmul per graph (identical math).
+Message aggregation is a segment-sum — the MPNN hot spot. Implementations
+(selected per call or via ``cfg.segment_sum_impl``):
+
+  * ``"scatter"`` (default) — ``zeros.at[b, dst].add(msg)``: one XLA
+    scatter-add, O(E·F) work. Fastest lowering on CPU/GPU and what XLA:TPU
+    rewrites into its own sorted-segment ops.
+  * ``"jnp"``     — one-hot einsum per graph, O(E·A·F) work. The original
+    reference formulation; kept as the parity oracle.
+  * ``"pallas"``  — blocked mask-matmul MXU kernel
+    (``repro.kernels.segment_sum``), batched grid over B.
+  * ``"fused"``   — the full message hot path (gather -> d² -> φ_e MLP ->
+    masked segment-sum) in one Pallas kernel (``repro.kernels.egnn_edge``),
+    never materializing the (B,E,2H+1) concat in HBM.
 """
 from __future__ import annotations
 
@@ -25,12 +35,30 @@ import jax.numpy as jnp
 from .common import KeyGen, Params, dense, embedding_init, embed
 from .mlp import mlp_init, mlp_apply
 
+SEGMENT_SUM_IMPLS = ("scatter", "jnp", "pallas", "fused")
 
-def segment_sum_nodes(messages, dst, n_nodes, *, edge_mask, impl="jnp"):
-    """messages: (B,E,F), dst: (B,E) -> (B,A,F) summing messages into nodes."""
+
+def segment_sum_nodes(messages, dst, n_nodes, *, edge_mask, impl="scatter"):
+    """messages: (B,E,F), dst: (B,E) -> (B,A,F) summing messages into nodes.
+
+    ``impl``: "scatter" | "jnp" | "pallas" (see module docstring; "fused" is
+    a whole-layer path and is dispatched in ``egnn_apply``, not here)."""
     if impl == "pallas":
         from repro.kernels.segment_sum import ops as ss_ops
         return ss_ops.segment_sum(messages, dst, n_nodes, edge_mask=edge_mask)
+    if impl == "scatter":
+        B = messages.shape[0]
+        m = jnp.where(edge_mask[..., None], messages, 0.0)
+        # masked / pad edges -> index n_nodes, out of range: dropped by the
+        # scatter (mode="drop"), mirroring the Pallas sentinel contract
+        d = jnp.where(edge_mask, dst, n_nodes)
+        out = jnp.zeros((B, n_nodes) + messages.shape[2:], messages.dtype)
+        return out.at[jnp.arange(B)[:, None], d].add(m, mode="drop")
+    if impl != "jnp":
+        raise ValueError(
+            f"segment_sum impl '{impl}'; this op takes 'scatter' | 'jnp' | "
+            "'pallas' ('fused' is a whole-layer path — select it via "
+            "egnn_apply / cfg.segment_sum_impl)")
     m = jnp.where(edge_mask[..., None], messages, 0.0)
     oh = jax.nn.one_hot(dst, n_nodes, dtype=messages.dtype)       # (B,E,A)
     return jnp.einsum("bea,bef->baf", oh, m)
@@ -51,10 +79,14 @@ def egnn_init(key, cfg) -> Params:
 
 def egnn_apply(params: Params, batch: dict, *, cfg, impl=None) -> jnp.ndarray:
     """-> node features (B, A, hidden). Invariant (distance-based) features.
-    impl selects the segment-sum kernel; None defers to
-    ``cfg.segment_sum_impl`` (config-driven kernel selection)."""
+    impl selects the message-aggregation path ("scatter" | "jnp" | "pallas" |
+    "fused"); None defers to ``cfg.segment_sum_impl`` (config-driven kernel
+    selection)."""
     if impl is None:
-        impl = getattr(cfg, "segment_sum_impl", "jnp") or "jnp"
+        impl = getattr(cfg, "segment_sum_impl", "scatter") or "scatter"
+    if impl not in SEGMENT_SUM_IMPLS:
+        raise ValueError(f"segment_sum impl '{impl}'; "
+                         f"known: {SEGMENT_SUM_IMPLS}")
     cd = cfg.compute_dtype
     species = batch["species"]
     pos = batch["pos"].astype(jnp.float32)
@@ -68,13 +100,19 @@ def egnn_apply(params: Params, batch: dict, *, cfg, impl=None) -> jnp.ndarray:
 
     for i in range(cfg.gnn_layers):
         lp = params[f"layer{i}"]
-        hi = gather(h, jnp.minimum(src, A - 1))
-        hj = gather(h, jnp.minimum(dst, A - 1))
-        xi = gather(pos, jnp.minimum(src, A - 1))
-        xj = gather(pos, jnp.minimum(dst, A - 1))
-        d2 = jnp.sum((xi - xj) ** 2, -1, keepdims=True).astype(cd)
-        m = mlp_apply(lp["phi_e"], jnp.concatenate([hi, hj, d2], -1), "silu", cd)
-        agg = segment_sum_nodes(m, dst, A, edge_mask=em, impl=impl)
+        if impl == "fused":
+            from repro.kernels.egnn_edge import ops as edge_ops
+            agg = edge_ops.egnn_edge_agg(h, pos, src, dst, em, lp["phi_e"],
+                                         compute_dtype=cd)
+        else:
+            hi = gather(h, jnp.minimum(src, A - 1))
+            hj = gather(h, jnp.minimum(dst, A - 1))
+            xi = gather(pos, jnp.minimum(src, A - 1))
+            xj = gather(pos, jnp.minimum(dst, A - 1))
+            d2 = jnp.sum((xi - xj) ** 2, -1, keepdims=True).astype(cd)
+            m = mlp_apply(lp["phi_e"], jnp.concatenate([hi, hj, d2], -1),
+                          "silu", cd)
+            agg = segment_sum_nodes(m, dst, A, edge_mask=em, impl=impl)
         upd = mlp_apply(lp["phi_h"], jnp.concatenate([h, agg], -1), "silu", cd)
         h = (h + upd) * nm[..., None].astype(cd)
     return h
