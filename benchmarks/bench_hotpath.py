@@ -46,10 +46,12 @@ REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 # would measure core contention, not the pipeline.
 FULL = dict(agg=dict(B=4, E=768, A=128, F=256, iters=20),
             egnn=dict(B=4, E=768, A=128, hidden=256, layers=2, iters=5),
+            train=dict(B=4, E=768, A=128, hidden=256, layers=2, iters=3),
             prefetch=dict(A=128, E=768, hidden=16, T=2, B=8, layers=1,
                           n_samples=64, steps=24, warmup=3))
 SMOKE = dict(agg=dict(B=2, E=96, A=16, F=32, iters=3),
              egnn=dict(B=2, E=96, A=16, hidden=32, layers=2, iters=2),
+             train=dict(B=2, E=96, A=16, hidden=32, layers=2, iters=2),
              prefetch=dict(A=16, E=64, hidden=16, T=2, B=2, layers=1,
                            n_samples=16, steps=4, warmup=1))
 
@@ -109,6 +111,24 @@ def bench_egnn_forward(B, E, A, hidden, layers, iters):
     return {"shape": dict(B=B, E=E, A=A, hidden=hidden, layers=layers),
             "us_per_call": us,
             "speedup_scatter_vs_onehot": us["jnp"] / us["scatter"]}
+
+
+def bench_egnn_train_step(B, E, A, hidden, layers, iters):
+    """Full train-step (fwd+bwd) wall-clock through ``jax.value_and_grad``
+    of the EGNN encoder, per aggregation impl — the ISSUE-3 measurement:
+    the fused path's backward used to re-trace the jnp reference; it now
+    runs the fused backward Pallas kernel (interpreter mode off-TPU)."""
+    from repro.models import gnn
+    cfg, params, batch = _egnn_setup(B, E, A, hidden, layers)
+    us = {}
+    for impl in ("scatter", "fused"):
+        def loss(p, b, impl=impl):
+            return jnp.mean(gnn.egnn_apply(p, b, cfg=cfg, impl=impl) ** 2)
+        f = jax.jit(jax.value_and_grad(loss))
+        us[impl] = _time(f, params, batch, iters=iters, warmup=1) * 1e6
+    return {"shape": dict(B=B, E=E, A=A, hidden=hidden, layers=layers),
+            "us_per_step": us,
+            "fused_vs_scatter": us["scatter"] / us["fused"]}
 
 
 # ---------------------------------------------------------------------------
@@ -207,12 +227,15 @@ def bench_prefetch(A, E, hidden, T, B, layers, n_samples, steps, warmup):
 
 def validate(result: dict):
     """Smoke contract: the emitted JSON is complete and self-consistent."""
-    for section in ("segment_sum", "egnn_forward", "prefetch"):
+    for section in ("segment_sum", "egnn_forward", "egnn_train_step",
+                    "prefetch"):
         assert section in result, section
     for impl in ("jnp", "scatter", "pallas"):
         assert result["segment_sum"]["us_per_call"][impl] > 0, impl
     for impl in ("jnp", "scatter", "pallas", "fused"):
         assert result["egnn_forward"]["us_per_call"][impl] > 0, impl
+    for impl in ("scatter", "fused"):
+        assert result["egnn_train_step"]["us_per_step"][impl] > 0, impl
     assert result["segment_sum"]["speedup_scatter_vs_onehot"] > 0
     assert result["prefetch"]["step_ms"]["prefetch_on"] > 0
     assert result["prefetch"]["speedup_prefetch_on_vs_off"] > 0
@@ -240,6 +263,7 @@ def main(argv=None):
         },
         "segment_sum": bench_segment_sum(**shapes["agg"]),
         "egnn_forward": bench_egnn_forward(**shapes["egnn"]),
+        "egnn_train_step": bench_egnn_train_step(**shapes["train"]),
         "prefetch": bench_prefetch(**shapes["prefetch"]),
     }
     validate(result)
@@ -253,6 +277,10 @@ def main(argv=None):
     eg = result["egnn_forward"]
     for impl, us in eg["us_per_call"].items():
         print(f"hotpath_egnn_fwd/{impl},{us:.0f},hidden={eg['shape']['hidden']}")
+    ts = result["egnn_train_step"]
+    for impl, us in ts["us_per_step"].items():
+        print(f"hotpath_egnn_train/{impl},{us:.0f},"
+              f"fwd+bwd;hidden={ts['shape']['hidden']}")
     pf = result["prefetch"]
     print(f"hotpath_prefetch,{pf['step_ms']['prefetch_on'] * 1e3:.0f},"
           f"off={pf['step_ms']['prefetch_off']:.1f}ms;"

@@ -85,6 +85,11 @@ class ArchConfig:
     #   "fused"             — whole message hot path (gather → d² → φ_e →
     #                         segment-sum) in one Pallas kernel
     segment_sum_impl: str = "scatter"
+    # Pallas block-size override shared by the segment-sum kernel and the
+    # fused egnn_edge kernel, forward AND backward (0 = autotune from the
+    # problem shape via repro.kernels.segment_sum.kernel.autotune_blocks):
+    kernel_block_n: int = 0        # node-tile rows
+    kernel_block_e: int = 0        # edge-tile rows
     # precision / memory ---------------------------------------------------
     param_dtype: Any = jnp.float32
     compute_dtype: Any = jnp.bfloat16

@@ -27,6 +27,29 @@ Masked/pad edges arrive with ``dst >= A`` (routed by ``ops.egnn_edge_agg``)
 and are excluded from the membership tile; their gather indices are clamped
 so the loads stay in bounds.
 
+Backward (``egnn_edge_fused_bwd``) — residual-recompute contract:
+the ``custom_vjp`` saves ONLY the primal inputs (h, pos, src, dst,
+edge_mask, φ_e); no edge-major intermediate survives the forward. The
+backward kernel re-gathers h_i/h_j/x_i/x_j, re-derives d² and re-runs the
+φ_e fc0 + SiLU per edge tile in VMEM (z recomputed in the compute dtype —
+bit-identical rounding to the forward — then the chain rule runs in f32),
+and emits in one pass per tile:
+
+  * ``d_h``   — masked scatter-transpose of dφ cotangents back to BOTH
+    endpoint rows (membership matmuls shared with
+    ``repro.kernels.segment_sum.accumulate_tile``);
+  * ``d_x``   — the d² chain: ``±2(x_i - x_j) · dd²`` scattered likewise;
+  * φ_e grads — (H,H)/(1,H) full reductions accumulated in f32 scratch
+    across the entire sequential grid, flushed by the final program.
+
+Masked/pad edges produce exact zeros in every cotangent because ``dm`` (the
+gather of the upstream cotangent) is zeroed before anything multiplies it.
+
+VMEM (backward) at A=128, H=256, BE=256 f32: node/cotangent tiles 3·128 KiB,
+φ_e weights ≈0.75 MiB, weight-grad scratch 3·(H,H) ≈0.75 MiB, edge tiles
+≈1 MiB — ≈2.9 MiB resident; H beyond ~700 needs a K-grid split, same as the
+forward.
+
 ``interpret=None`` auto-detects the backend (compiled on TPU, interpreter
 mode elsewhere — CPU CI validates numerics, not timing).
 """
@@ -39,7 +62,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.segment_sum.kernel import resolve_interpret
+from repro.kernels.segment_sum.kernel import accumulate_tile, resolve_interpret
 
 
 def _edge_kernel(src_ref, dst_ref, h_ref, pos_ref, w0i_ref, w0j_ref, w0d_ref,
@@ -72,13 +95,10 @@ def _edge_kernel(src_ref, dst_ref, h_ref, pos_ref, w0i_ref, w0j_ref, w0d_ref,
          + d2 * w0d_ref[...] + b0_ref[...])
     m = jax.nn.silu(z) @ w1_ref[...] + b1_ref[...]        # (BE, H)
 
-    # masked membership matmul (MXU): pad edges contribute zero columns
-    valid = dst < A
-    node_ids = jax.lax.broadcasted_iota(jnp.int32, (dst.shape[0], A), 1)
-    onehot = jnp.where(valid[:, None],
-                       (dst[:, None] == node_ids).astype(jnp.float32), 0.0)
-    acc_ref[...] += jax.lax.dot_general(
-        onehot, m.astype(jnp.float32), (((0,), (0,)), ((), ())))
+    # membership matmul (MXU): pad edges carry dst >= A, which matches no
+    # node-id column (shared scatter-transpose tile with
+    # repro.kernels.segment_sum)
+    accumulate_tile(dst, m.astype(jnp.float32), acc_ref, ib=0, bn=A)
 
     @pl.when(je == ne - 1)
     def _flush():
@@ -123,3 +143,171 @@ def egnn_edge_fused(h, pos, src, dst, w0i, w0j, w0d, b0, w1, b1, *,
         scratch_shapes=[pltpu.VMEM((A, H), jnp.float32)],
         interpret=resolve_interpret(interpret),
     )(src, dst, h, pos, w0i, w0j, w0d, b0, w1, b1)
+
+
+def _edge_bwd_kernel(src_ref, dst_ref, h_ref, pos_ref, g_ref,
+                     w0i_ref, w0j_ref, w0d_ref, b0_ref, w1_ref,
+                     dh_ref, dpos_ref, dw0i_ref, dw0j_ref, dw0d_ref,
+                     db0_ref, dw1_ref, db1_ref,
+                     acc_dh, acc_dpos, acc_w0i, acc_w0j, acc_w0d,
+                     acc_b0, acc_w1, acc_b1, *, nb, ne):
+    b = pl.program_id(0)    # graph (outer)
+    je = pl.program_id(1)   # edge block (sequential inner)
+
+    @pl.when(je == 0)
+    def _init_batch():
+        acc_dh[...] = jnp.zeros_like(acc_dh)
+        acc_dpos[...] = jnp.zeros_like(acc_dpos)
+
+    @pl.when((b == 0) & (je == 0))
+    def _init_weights():
+        acc_w0i[...] = jnp.zeros_like(acc_w0i)
+        acc_w0j[...] = jnp.zeros_like(acc_w0j)
+        acc_w0d[...] = jnp.zeros_like(acc_w0d)
+        acc_b0[...] = jnp.zeros_like(acc_b0)
+        acc_w1[...] = jnp.zeros_like(acc_w1)
+        acc_b1[...] = jnp.zeros_like(acc_b1)
+
+    src = src_ref[0]                      # (BE,) int32, >= A marks pad
+    dst = dst_ref[0]
+    h = h_ref[0]                          # (A, H) compute dtype
+    pos = pos_ref[0].astype(jnp.float32)  # (A, 3)
+    g = g_ref[0]                          # (A, H) upstream cotangent
+    A = h.shape[0]
+    cd = h.dtype
+
+    # --- recompute the forward residuals for this edge tile (nothing was
+    # saved edge-major in HBM; see the residual-recompute contract in the
+    # module docstring). z is recomputed in the compute dtype — identical
+    # rounding to the forward kernel — then the chain rule runs in f32.
+    sc = jnp.minimum(src, A - 1)
+    dc = jnp.minimum(dst, A - 1)
+    hi = jnp.take(h, sc, axis=0)          # (BE, H)
+    hj = jnp.take(h, dc, axis=0)
+    xi = jnp.take(pos, sc, axis=0)        # (BE, 3) f32
+    xj = jnp.take(pos, dc, axis=0)
+    diff = xi - xj
+    d2f = jnp.sum(diff ** 2, axis=-1, keepdims=True)          # (BE, 1) f32
+    z = (hi @ w0i_ref[...] + hj @ w0j_ref[...]
+         + d2f.astype(cd) * w0d_ref[...] + b0_ref[...])       # (BE, H) cd
+    zf = z.astype(jnp.float32)
+    sig = jax.nn.sigmoid(zf)
+    s = zf * sig                                              # silu(z), f32
+
+    # --- dm: gather of g at the destination, zeroed on masked/pad edges.
+    # Every downstream cotangent is a product with dm (or dz), so masked
+    # edges contribute exact zeros everywhere below.
+    valid = dst < A
+    gm = jnp.take(g, dc, axis=0).astype(jnp.float32)          # (BE, H)
+    dm = jnp.where(valid[:, None], gm, 0.0)
+
+    w1f = w1_ref[...].astype(jnp.float32)
+    ds = jax.lax.dot_general(dm, w1f, (((1,), (1,)), ((), ())))  # dm @ w1ᵀ
+    dz = ds * (sig * (1.0 + zf * (1.0 - sig)))                # silu'(z)
+
+    # --- node cotangents, scattered via the shared membership-matmul tile
+    # (clamped indices always hit a real row; masked rows are exact zeros)
+    w0if = w0i_ref[...].astype(jnp.float32)
+    w0jf = w0j_ref[...].astype(jnp.float32)
+    w0df = w0d_ref[...].astype(jnp.float32)                   # (1, H)
+    dhi = jax.lax.dot_general(dz, w0if, (((1,), (1,)), ((), ())))
+    dhj = jax.lax.dot_general(dz, w0jf, (((1,), (1,)), ((), ())))
+    dd2 = jnp.sum(dz * w0df, axis=-1, keepdims=True)          # (BE, 1)
+    ddiff = 2.0 * diff * dd2                                  # (BE, 3) = d xi
+    accumulate_tile(sc, dhi, acc_dh, ib=0, bn=A)
+    accumulate_tile(dc, dhj, acc_dh, ib=0, bn=A)
+    accumulate_tile(sc, ddiff, acc_dpos, ib=0, bn=A)
+    accumulate_tile(dc, -ddiff, acc_dpos, ib=0, bn=A)
+
+    # --- φ_e weight cotangents: full reduction over every (b, je) tile
+    hif = hi.astype(jnp.float32)
+    hjf = hj.astype(jnp.float32)
+    acc_w0i[...] += jax.lax.dot_general(hif, dz, (((0,), (0,)), ((), ())))
+    acc_w0j[...] += jax.lax.dot_general(hjf, dz, (((0,), (0,)), ((), ())))
+    acc_w0d[...] += jnp.sum(dz * d2f, axis=0, keepdims=True)
+    acc_b0[...] += jnp.sum(dz, axis=0, keepdims=True)
+    acc_w1[...] += jax.lax.dot_general(s, dm, (((0,), (0,)), ((), ())))
+    acc_b1[...] += jnp.sum(dm, axis=0, keepdims=True)
+
+    @pl.when(je == ne - 1)
+    def _flush_batch():
+        dh_ref[0] = acc_dh[...].astype(dh_ref.dtype)
+        dpos_ref[0] = acc_dpos[...].astype(dpos_ref.dtype)
+
+    @pl.when((b == nb - 1) & (je == ne - 1))
+    def _flush_weights():
+        dw0i_ref[...] = acc_w0i[...]
+        dw0j_ref[...] = acc_w0j[...]
+        dw0d_ref[...] = acc_w0d[...]
+        db0_ref[...] = acc_b0[...]
+        dw1_ref[...] = acc_w1[...]
+        db1_ref[...] = acc_b1[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_e", "interpret"))
+def egnn_edge_fused_bwd(g, h, pos, src, dst, w0i, w0j, w0d, b0, w1, *,
+                        block_e=256, interpret=None):
+    """Fused backward. Inputs mirror ``egnn_edge_fused`` (same routed
+    src/dst with the >= A pad sentinel) plus ``g``, the (B, A, H) cotangent
+    of the aggregated output. The forward's edge-major intermediates are
+    recomputed tile-by-tile in VMEM — no (B, E, 2H+1) concat or (B, E, H)
+    message tensor ever lands in HBM.
+
+    Returns ``(dh, dpos, dw0i, dw0j, dw0d, db0, dw1, db1)``:
+    dh (B, A, H) in h.dtype; dpos (B, A, 3) f32; the φ_e cotangents in f32
+    (split row blocks, biases as (1, H) rows — ``ops._edge_agg_bwd``
+    reassembles the param dict and casts to the param dtypes)."""
+    B, A, H = h.shape
+    E = src.shape[1]
+    be = min(block_e, E)
+    ne = -(-E // be)
+    if ne * be != E:
+        pe = ne * be - E
+        src = jnp.pad(src, ((0, 0), (0, pe)), constant_values=A)
+        dst = jnp.pad(dst, ((0, 0), (0, pe)), constant_values=A)
+    src = src.astype(jnp.int32)
+    dst = dst.astype(jnp.int32)
+
+    kern = functools.partial(_edge_bwd_kernel, nb=B, ne=ne)
+    full = lambda s: pl.BlockSpec(s, lambda b, je: (0,) * len(s))
+    out_shape = [
+        jax.ShapeDtypeStruct((B, A, H), h.dtype),          # dh
+        jax.ShapeDtypeStruct((B, A, 3), jnp.float32),      # dpos
+        jax.ShapeDtypeStruct((H, H), jnp.float32),         # dw0i
+        jax.ShapeDtypeStruct((H, H), jnp.float32),         # dw0j
+        jax.ShapeDtypeStruct((1, H), jnp.float32),         # dw0d
+        jax.ShapeDtypeStruct((1, H), jnp.float32),         # db0
+        jax.ShapeDtypeStruct((H, H), jnp.float32),         # dw1
+        jax.ShapeDtypeStruct((1, H), jnp.float32),         # db1
+    ]
+    return pl.pallas_call(
+        kern,
+        grid=(B, ne),
+        in_specs=[
+            pl.BlockSpec((1, be), lambda b, je: (b, je)),      # src
+            pl.BlockSpec((1, be), lambda b, je: (b, je)),      # dst
+            pl.BlockSpec((1, A, H), lambda b, je: (b, 0, 0)),  # h
+            pl.BlockSpec((1, A, 3), lambda b, je: (b, 0, 0)),  # pos
+            pl.BlockSpec((1, A, H), lambda b, je: (b, 0, 0)),  # g
+            full(w0i.shape), full(w0j.shape), full(w0d.shape),
+            full(b0.shape), full(w1.shape),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, A, H), lambda b, je: (b, 0, 0)),
+            pl.BlockSpec((1, A, 3), lambda b, je: (b, 0, 0)),
+            full((H, H)), full((H, H)), full((1, H)),
+            full((1, H)), full((H, H)), full((1, H)),
+        ],
+        out_shape=out_shape,
+        scratch_shapes=[
+            pltpu.VMEM((A, H), jnp.float32),   # acc_dh
+            pltpu.VMEM((A, 3), jnp.float32),   # acc_dpos
+            pltpu.VMEM((H, H), jnp.float32),   # acc_w0i
+            pltpu.VMEM((H, H), jnp.float32),   # acc_w0j
+            pltpu.VMEM((1, H), jnp.float32),   # acc_w0d
+            pltpu.VMEM((1, H), jnp.float32),   # acc_b0
+            pltpu.VMEM((H, H), jnp.float32),   # acc_w1
+            pltpu.VMEM((1, H), jnp.float32),   # acc_b1
+        ],
+        interpret=resolve_interpret(interpret),
+    )(src, dst, h, pos, g, w0i, w0j, w0d, b0, w1)

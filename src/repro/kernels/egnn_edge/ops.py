@@ -1,12 +1,14 @@
-"""Public entry for the fused EGNN edge kernel, with a training-safe VJP.
+"""Public entry for the fused EGNN edge kernel, forward and backward.
 
 ``egnn_edge_agg`` runs the fused Pallas forward (one kernel for gather ->
 d² -> φ_e -> masked segment-sum) and carries a ``jax.custom_vjp`` whose
-backward differentiates the pure-jnp reference (``ref.py``) — the standard
-fused-forward / recompute-backward pattern, so ``impl="fused"`` is usable
-inside ``jax.grad`` train steps without a hand-written backward kernel.
-(A fused backward kernel is the obvious follow-up once the forward is
-profiled on real TPUs.)
+backward is the fused Pallas backward kernel (``kernel.egnn_edge_fused_bwd``):
+it recomputes the edge-major residuals tile-by-tile from the saved INPUTS
+(h, pos, src, dst, edge_mask) and emits d_h / d_x / φ_e weight cotangents
+without materializing the (B, E, 2H+1) concat or the (B, E, H) message
+tensor in HBM — so ``impl="fused"`` trains with the same memory profile it
+infers with. The pure-jnp reference (``ref.py``) remains the parity oracle
+for both directions (tests/test_hotpath.py).
 """
 from __future__ import annotations
 
@@ -15,8 +17,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .kernel import egnn_edge_fused
-from .ref import egnn_edge_agg_ref
+from repro.kernels.segment_sum.kernel import autotune_blocks
+
+from .kernel import egnn_edge_fused, egnn_edge_fused_bwd
 
 
 def _split_phi_e(phi_e, H, cd):
@@ -29,6 +32,24 @@ def _split_phi_e(phi_e, H, cd):
             phi_e["fc0"]["b"].astype(cd)[None, :],
             phi_e["fc1"]["w"].astype(cd),
             phi_e["fc1"]["b"].astype(cd)[None, :])
+
+
+def _resolve_block_e(block_e, A, E, H):
+    """autotune-or-override: 0/None -> the shared segment-sum heuristic.
+    The chosen block_e is pinned into the custom_vjp static for BOTH
+    directions, so the budget models the larger (backward) resident set:
+    h + g + acc_dh node tiles (3·A·H), three (H,H) weight tiles
+    (w0i/w0j/w1) plus three (H,H) f32 weight-grad scratches, the (1,H)
+    rows, and ~4 live (be,H) f32 edge intermediates beyond the one message
+    tile autotune_blocks already counts (folded in by tripling its be·F
+    term via vmem_limit headroom)."""
+    if block_e:
+        return block_e
+    extra = 4 * (3 * A * H + 6 * H * H + 8 * H)
+    # hand autotune a reduced budget so its single be·F message-tile term
+    # stands in for the backward's several concurrent (be,H) intermediates
+    return autotune_blocks(A, E, H, extra_bytes=extra,
+                           vmem_limit=4 << 20)[1]
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
@@ -48,28 +69,45 @@ def _edge_agg(static, h, pos, src, dst, edge_mask, phi_e):
 
 def _edge_agg_fwd(static, h, pos, src, dst, edge_mask, phi_e):
     out = _edge_agg(static, h, pos, src, dst, edge_mask, phi_e)
+    # residuals are the primal INPUTS only — every edge-major intermediate
+    # is recomputed inside the backward kernel (see module docstring)
     return out, (h, pos, src, dst, edge_mask, phi_e)
 
 
 def _edge_agg_bwd(static, res, g):
-    compute_dtype = static[0]
+    compute_dtype, block_e, interpret = static
     h, pos, src, dst, edge_mask, phi_e = res
-    _, vjp = jax.vjp(
-        lambda hh, pp, ww: egnn_edge_agg_ref(
-            hh, pp, src, dst, edge_mask, ww, compute_dtype=compute_dtype),
-        h, pos, phi_e)
-    dh, dpos, dphi = vjp(g)
-    return dh, dpos, None, None, None, dphi
+    cd = compute_dtype or h.dtype
+    H = h.shape[-1]
+    A = h.shape[1]
+    w0i, w0j, w0d, b0, w1, _ = _split_phi_e(phi_e, H, cd)
+    sr = jnp.where(edge_mask, src, A)
+    dr = jnp.where(edge_mask, dst, A)
+    dh, dpos, dw0i, dw0j, dw0d, db0, dw1, db1 = egnn_edge_fused_bwd(
+        g, h.astype(cd), pos, sr, dr, w0i, w0j, w0d, b0, w1,
+        block_e=block_e, interpret=interpret)
+    f0, f1 = phi_e["fc0"], phi_e["fc1"]
+    dphi = {
+        "fc0": {"w": jnp.concatenate([dw0i, dw0j, dw0d],
+                                     axis=0).astype(f0["w"].dtype),
+                "b": db0[0].astype(f0["b"].dtype)},
+        "fc1": {"w": dw1.astype(f1["w"].dtype),
+                "b": db1[0].astype(f1["b"].dtype)},
+    }
+    return dh.astype(h.dtype), dpos.astype(pos.dtype), None, None, None, dphi
 
 
 _edge_agg.defvjp(_edge_agg_fwd, _edge_agg_bwd)
 
 
 def egnn_edge_agg(h, pos, src, dst, edge_mask, phi_e, *, compute_dtype=None,
-                  block_e=256, interpret=None):
+                  block_e=None, interpret=None):
     """Fused EGNN message + aggregation: (B, A, H) node features in,
     (B, A, H) aggregated messages out. Drop-in for the unfused
-    gather/φ_e/segment-sum sequence in ``egnn_apply`` (numerics: ``ref.py``).
-    ``interpret=None`` auto-detects the backend."""
+    gather/φ_e/segment-sum sequence in ``egnn_apply`` (numerics: ``ref.py``),
+    differentiable end-to-end via the fused backward kernel.
+    ``block_e=None`` autotunes (``cfg.kernel_block_e`` overrides via
+    ``egnn_apply``); ``interpret=None`` auto-detects the backend."""
+    block_e = _resolve_block_e(block_e, h.shape[1], src.shape[1], h.shape[-1])
     static = (compute_dtype, block_e, interpret)
     return _edge_agg(static, h, pos, src, dst, edge_mask, phi_e)

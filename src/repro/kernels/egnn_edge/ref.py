@@ -3,7 +3,10 @@
 Exactly the unfused message hot path of ``repro.models.gnn.egnn_apply``
 (gather -> d² -> φ_e via ``mlp_apply`` on the materialized concat ->
 scatter segment-sum), so kernel-vs-ref parity is also kernel-vs-model
-parity."""
+parity. ``jax.grad`` through this function is likewise the oracle for the
+fused BACKWARD kernel (``kernel.egnn_edge_fused_bwd``): the custom_vjp in
+``ops.py`` must match it within tolerance in every cotangent
+(tests/test_hotpath.py paper-shape parity suite)."""
 from __future__ import annotations
 
 import jax.numpy as jnp

@@ -38,11 +38,18 @@ def _fd_kernel(qpos_ref, kp_ref, q_ref, k_ref, v_ref,
 
     def body(i, carry):
         m, l, acc = carry
-        k = pl.load(k_ref, (0, 0, pl.dslice(i * bk, bk), slice(None))
-                    ).astype(jnp.float32)           # (BK, D)
-        v = pl.load(v_ref, (0, 0, pl.dslice(i * bk, bk), slice(None))
-                    ).astype(jnp.float32)
-        kp = pl.load(kp_ref, (0, pl.dslice(i * bk, bk)))  # (BK,)
+        # full-Slice index tuples only: jax 0.4.37's interpret-mode discharge
+        # rule chokes on bare ints inside pl.load indices (it probes
+        # ``.shape`` on every non-Slice entry), so the unit leading dims are
+        # loaded as dslice(0, 1) and squeezed after the load
+        k = pl.load(k_ref, (pl.dslice(0, 1), pl.dslice(0, 1),
+                            pl.dslice(i * bk, bk), slice(None))
+                    )[0, 0].astype(jnp.float32)     # (BK, D)
+        v = pl.load(v_ref, (pl.dslice(0, 1), pl.dslice(0, 1),
+                            pl.dslice(i * bk, bk), slice(None))
+                    )[0, 0].astype(jnp.float32)
+        kp = pl.load(kp_ref, (pl.dslice(0, 1),
+                              pl.dslice(i * bk, bk)))[0]  # (BK,)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # (G,BK)
         dpos = qpos - kp
         mask = (kp > -(10 ** 8)) & (dpos >= 0)

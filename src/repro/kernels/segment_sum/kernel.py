@@ -71,14 +71,39 @@ def _block_geometry(n_nodes: int, E: int, block_n: int, block_e: int):
     return bn, be, nb, ne, sentinel
 
 
-def _accumulate_tile(dst, msg, acc_ref, *, ib, bn):
-    """One (edge-block x node-block) tile: membership one-hot as an MXU
-    matmul, accumulated into the f32 scratch."""
+def accumulate_tile(dst, msg, acc_ref, *, ib, bn):
+    """One (edge-block x node-block) scatter-transpose tile: membership
+    one-hot as an MXU matmul (``one_hotᵀ @ msg``), accumulated into the f32
+    scratch. This is the shared TPU replacement for scatter-add — used by
+    both segment-sum entry points here and by the fused EGNN edge kernel's
+    forward aggregation and backward ``d_h``/``d_x`` scatters
+    (``repro.kernels.egnn_edge``). Masking is by index, per the sentinel
+    contract: any ``dst`` outside this tile's ``ib*bn .. ib*bn+bn-1`` id
+    range matches no one-hot column and contributes nothing."""
     node_ids = ib * bn + jax.lax.broadcasted_iota(
         jnp.int32, (dst.shape[0], bn), 1)
     onehot = (dst[:, None] == node_ids).astype(jnp.float32)   # (BE, BN)
     acc_ref[...] += jax.lax.dot_general(
         onehot, msg, (((0,), (0,)), ((), ())))
+
+
+_accumulate_tile = accumulate_tile  # back-compat alias
+
+
+def autotune_blocks(n_nodes: int, E: int, F: int, *, extra_bytes: int = 0,
+                    vmem_limit: int = 8 << 20) -> tuple[int, int]:
+    """Heuristic (block_n, block_e) for the membership-matmul kernels: start
+    from the MXU-native 128x256 tile and halve ``block_e`` until the resident
+    f32 working set (node accumulator + message tile + membership tile, plus
+    ``extra_bytes`` for caller-resident buffers such as the fused kernel's
+    φ_e weights) fits the VMEM budget. Callers override via the
+    ``kernel_block_n`` / ``kernel_block_e`` config knobs
+    (``repro.configs.base.ArchConfig``)."""
+    bn = max(8, min(128, n_nodes))
+    be = max(8, min(256, E))
+    while be > 8 and extra_bytes + 4 * (bn * F + be * F + be * bn) > vmem_limit:
+        be //= 2
+    return bn, be
 
 
 def _ss_kernel(dst_ref, msg_ref, o_ref, acc_ref, *, bn, ne):

@@ -11,13 +11,22 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from .kernel import segment_sum_2d, segment_sum_batched
+from .kernel import autotune_blocks, segment_sum_2d, segment_sum_batched
 
 
 def segment_sum(messages, dst, n_nodes: int, *, edge_mask=None,
-                block_n=128, block_e=256, interpret=None):
+                block_n=None, block_e=None, interpret=None):
     """messages: (B,E,F) or (E,F); dst: (B,E) or (E,) -> (B,n_nodes,F) or
-    (n_nodes,F)."""
+    (n_nodes,F). ``block_n``/``block_e`` default to the ``autotune_blocks``
+    heuristic; pass explicit values (e.g. the ``kernel_block_*`` config
+    knobs) to override."""
+    if messages.ndim not in (2, 3):
+        raise ValueError(f"messages must be (E,F) or (B,E,F), got "
+                         f"ndim={messages.ndim}")
+    E, F = messages.shape[-2], messages.shape[-1]
+    auto_n, auto_e = autotune_blocks(n_nodes, E, F)
+    block_n = block_n or auto_n
+    block_e = block_e or auto_e
     if edge_mask is not None:
         # n_nodes is >= every valid id and lands on a discarded padded row
         # (or matches nothing) inside the kernel — see sentinel contract
@@ -25,8 +34,5 @@ def segment_sum(messages, dst, n_nodes: int, *, edge_mask=None,
     if messages.ndim == 3:
         return segment_sum_batched(messages, dst, n_nodes, block_n=block_n,
                                    block_e=block_e, interpret=interpret)
-    if messages.ndim == 2:
-        return segment_sum_2d(messages, dst, n_nodes, block_n=block_n,
-                              block_e=block_e, interpret=interpret)
-    raise ValueError(f"messages must be (E,F) or (B,E,F), got "
-                     f"ndim={messages.ndim}")
+    return segment_sum_2d(messages, dst, n_nodes, block_n=block_n,
+                          block_e=block_e, interpret=interpret)

@@ -27,7 +27,7 @@ from repro.configs import SHAPES
 from repro.configs.sharding import make_spec_fn, tree_shardings
 from repro.configs.specs import cache_specs, data_axes, input_specs
 from repro.engine import ShardingPlan, build_model, make_step
-from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.hlo_analysis import analyze_hlo, xla_cost_analysis
 from repro.launch.hlo_stats import collective_stats, op_histogram
 from repro.launch.mesh import make_gfm_paper_mesh, make_production_mesh
 from repro.optim import adamw
@@ -194,8 +194,7 @@ def analyze(lowered, compile_too=True) -> dict:
         except Exception as e:  # pragma: no cover
             res["memory"] = {"error": str(e)}
         try:
-            ca = compiled.cost_analysis()
-            ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+            ca = xla_cost_analysis(compiled)
             res["cost"] = {k: float(v) for k, v in ca.items()
                            if k in ("flops", "bytes accessed", "transcendentals",
                                     "utilization operand 0 {}")

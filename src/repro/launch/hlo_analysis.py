@@ -37,6 +37,11 @@ _SKIP_TRAFFIC = ("parameter", "constant", "get-tuple-element", "tuple",
                  "partition-id", "replica-id")
 
 _SHAPE_TOK = re.compile(r"(\w+)\[([\d,]*)\]")
+# one operand inside an instruction's argument list. Older XLA prints
+# ``dot(%a, %b)``; this container's XLA prints typed operands
+# ``dot(f32[128,128]{1,0} %a, ...)`` — the inline shape is captured as a
+# fallback for names missing from the symbol table.
+_OPERAND = re.compile(r"(?:([\w]+\[[\d,]*\](?:\{[^}]*\})?)\s+)?%([\w.\-]+)")
 _INSTR = re.compile(
     r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:[\w]+\[[\d,]*\]\S*))\s+([\w\-]+)\((.*)$")
 _COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->")
@@ -70,6 +75,17 @@ class Instr:
     shape: str
     op: str
     rest: str
+
+
+def _operands(ins: Instr) -> list[tuple[str, str | None]]:
+    """(name, inline_shape_or_None) per operand of the instruction, robust
+    to both bare (``%a``) and typed (``f32[..]{..} %a``) dump formats."""
+    return [(m.group(2), m.group(1))
+            for m in _OPERAND.finditer(ins.rest.split(")")[0])]
+
+
+def _operand_shape(comp: "Computation", name: str, inline: str | None) -> str:
+    return comp.symtab.get(name) or inline or ""
 
 
 @dataclass
@@ -178,10 +194,10 @@ def _dot_flops(comp: Computation, ins: Instr) -> float:
     if not mm:
         return 2.0 * out_elems  # dot with no contraction info
     cdims = [int(x) for x in mm.group(1).split(",") if x]
-    lhs = re.match(r"\s*%?([\w.\-]+)", ins.rest)
+    ops = _operands(ins)
     contract = 1
-    if lhs and lhs.group(1) in comp.symtab:
-        _, ldims = _shape_dims(comp.symtab[lhs.group(1)])
+    if ops:
+        _, ldims = _shape_dims(_operand_shape(comp, *ops[0]))
         for c in cdims:
             if c < len(ldims):
                 contract *= ldims[c]
@@ -190,9 +206,10 @@ def _dot_flops(comp: Computation, ins: Instr) -> float:
 
 def _operand_bytes(comp: Computation, ins: Instr) -> list[int]:
     out = []
-    for opn in re.findall(r"%([\w.\-]+)", ins.rest.split(")")[0]):
-        if opn in comp.symtab:
-            out.append(_shape_elems_bytes(comp.symtab[opn])[1])
+    for name, inline in _operands(ins):
+        shape = _operand_shape(comp, name, inline)
+        if shape:
+            out.append(_shape_elems_bytes(shape)[1])
     return out
 
 
@@ -219,16 +236,22 @@ def _fusion_traffic(comps, comp: Computation, ins: Instr) -> float:
         pb = _shape_elems_bytes(callee.symtab[p])[1]
         uses = [i for i in callee.instrs
                 if re.search(r"%" + re.escape(p) + r"\b", i.rest)]
+
+        def first_opnd(u):
+            ops = _operands(u)
+            return ops[0][0] if ops else None
+
         if uses and all(u.op in ("dynamic-slice", "slice", "gather") and
-                        u.rest.lstrip().startswith(f"%{p}") for u in uses):
+                        first_opnd(u) == p for u in uses):
             total += sum(_shape_elems_bytes(u.shape)[1] for u in uses)
         elif uses and all(u.op == "dynamic-update-slice" and
-                          u.rest.lstrip().startswith(f"%{p}") for u in uses):
+                          first_opnd(u) == p for u in uses):
             # in-place accumulator: charge write of the update region(s)
             for u in uses:
-                ops = re.findall(r"%([\w.\-]+)", u.rest.split(")")[0])
-                upd = (_shape_elems_bytes(callee.symtab[ops[1]])[1]
-                       if len(ops) > 1 and ops[1] in callee.symtab else 0)
+                ops = _operands(u)
+                upd = (_shape_elems_bytes(
+                    _operand_shape(callee, *ops[1]))[1]
+                       if len(ops) > 1 else 0)
                 total += 2 * upd
                 inplace_out += pb
         else:
@@ -264,6 +287,15 @@ def _instr_traffic_full(comps, comp: Computation, ins: Instr) -> float:
     if ins.op == "fusion":
         return _fusion_traffic(comps, comp, ins)
     return _instr_traffic(comp, ins)
+
+
+def xla_cost_analysis(compiled) -> dict:
+    """jax-version-tolerant ``compiled.cost_analysis()``: newer jax returns
+    the per-device dict directly, jax 0.4.x wraps it in a 1-element list."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
 
 
 def analyze_hlo(text: str) -> dict:

@@ -38,14 +38,18 @@ from .mlp import mlp_init, mlp_apply
 SEGMENT_SUM_IMPLS = ("scatter", "jnp", "pallas", "fused")
 
 
-def segment_sum_nodes(messages, dst, n_nodes, *, edge_mask, impl="scatter"):
+def segment_sum_nodes(messages, dst, n_nodes, *, edge_mask, impl="scatter",
+                      block_n=None, block_e=None):
     """messages: (B,E,F), dst: (B,E) -> (B,A,F) summing messages into nodes.
 
     ``impl``: "scatter" | "jnp" | "pallas" (see module docstring; "fused" is
-    a whole-layer path and is dispatched in ``egnn_apply``, not here)."""
+    a whole-layer path and is dispatched in ``egnn_apply``, not here).
+    ``block_n``/``block_e`` tile the Pallas kernel (None = autotune; only
+    the "pallas" impl consumes them)."""
     if impl == "pallas":
         from repro.kernels.segment_sum import ops as ss_ops
-        return ss_ops.segment_sum(messages, dst, n_nodes, edge_mask=edge_mask)
+        return ss_ops.segment_sum(messages, dst, n_nodes, edge_mask=edge_mask,
+                                  block_n=block_n, block_e=block_e)
     if impl == "scatter":
         B = messages.shape[0]
         m = jnp.where(edge_mask[..., None], messages, 0.0)
@@ -88,6 +92,10 @@ def egnn_apply(params: Params, batch: dict, *, cfg, impl=None) -> jnp.ndarray:
         raise ValueError(f"segment_sum impl '{impl}'; "
                          f"known: {SEGMENT_SUM_IMPLS}")
     cd = cfg.compute_dtype
+    # kernel tile override shared by the pallas + fused paths (0/absent =
+    # autotune inside the kernel wrappers)
+    bn = getattr(cfg, "kernel_block_n", 0) or None
+    be = getattr(cfg, "kernel_block_e", 0) or None
     species = batch["species"]
     pos = batch["pos"].astype(jnp.float32)
     src, dst = batch["edge_src"], batch["edge_dst"]
@@ -103,7 +111,7 @@ def egnn_apply(params: Params, batch: dict, *, cfg, impl=None) -> jnp.ndarray:
         if impl == "fused":
             from repro.kernels.egnn_edge import ops as edge_ops
             agg = edge_ops.egnn_edge_agg(h, pos, src, dst, em, lp["phi_e"],
-                                         compute_dtype=cd)
+                                         compute_dtype=cd, block_e=be)
         else:
             hi = gather(h, jnp.minimum(src, A - 1))
             hj = gather(h, jnp.minimum(dst, A - 1))
@@ -112,7 +120,8 @@ def egnn_apply(params: Params, batch: dict, *, cfg, impl=None) -> jnp.ndarray:
             d2 = jnp.sum((xi - xj) ** 2, -1, keepdims=True).astype(cd)
             m = mlp_apply(lp["phi_e"], jnp.concatenate([hi, hj, d2], -1),
                           "silu", cd)
-            agg = segment_sum_nodes(m, dst, A, edge_mask=em, impl=impl)
+            agg = segment_sum_nodes(m, dst, A, edge_mask=em, impl=impl,
+                                    block_n=bn, block_e=be)
         upd = mlp_apply(lp["phi_h"], jnp.concatenate([h, agg], -1), "silu", cd)
         h = (h + upd) * nm[..., None].astype(cd)
     return h

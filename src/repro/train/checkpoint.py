@@ -17,6 +17,18 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def _npz_path(path: str) -> str:
+    return path if path.endswith(".npz") else path + ".npz"
+
+
+def _meta_path(path: str) -> str:
+    """Metadata sidecar next to the .npz. Only a trailing ``.npz`` is
+    stripped — ``path.replace(".npz", "")`` would corrupt paths with the
+    substring mid-string (e.g. ``run.npz.bak/ck``)."""
+    base = path[:-len(".npz")] if path.endswith(".npz") else path
+    return base + ".meta.json"
+
+
 def _flatten(tree, prefix=""):
     out = {}
     if isinstance(tree, dict):
@@ -37,17 +49,16 @@ def save(path: str, tree: Any, metadata: dict | None = None):
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     flat = _flatten(tree)
     arrs = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
-    np.savez(path if path.endswith(".npz") else path + ".npz", **arrs)
+    np.savez(_npz_path(path), **arrs)
     if metadata is not None:
-        with open(path.replace(".npz", "") + ".meta.json", "w") as f:
+        with open(_meta_path(path), "w") as f:
             json.dump(metadata, f, indent=2)
 
 
 def restore(path: str, template: Any) -> Any:
     """template: a pytree of arrays OR ShapeDtypeStructs (possibly with
     .sharding) with the target structure."""
-    p = path if path.endswith(".npz") else path + ".npz"
-    data = np.load(p)
+    data = np.load(_npz_path(path))
     flat_t = _flatten(template)
 
     def put(k, t):
@@ -75,5 +86,5 @@ def _unflatten_like(tree, flat, prefix):
 
 
 def load_metadata(path: str) -> dict:
-    with open(path.replace(".npz", "") + ".meta.json") as f:
+    with open(_meta_path(path)) as f:
         return json.load(f)

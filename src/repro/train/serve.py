@@ -17,11 +17,6 @@ from repro.models import transformer
 def extend_caches(caches, cfg, capacity: int):
     """Pad prefill-produced attention caches (length S) to ``capacity``.
     SSM/xLSTM state caches are fixed-size and pass through unchanged."""
-    def pad(leaf):
-        # attention caches are (B, S, K, hd)/(B, S, r); states keep rank<4 or
-        # carry no sequence dim — identified by the dict keys below instead.
-        return leaf
-
     def fix(tree):
         if isinstance(tree, dict):
             out = {}

@@ -25,6 +25,51 @@ def test_roundtrip(tmp_path):
     assert checkpoint.load_metadata(path)["step"] == 7
 
 
+def test_trainstate_roundtrip_with_npz_midstring_path(tmp_path):
+    """NamedTuple TrainState tree survives save→restore, including through a
+    directory whose name contains ``.npz`` mid-string (the sidecar path used
+    to be derived with ``str.replace`` and corrupted such paths)."""
+    from repro.engine import TrainState
+
+    params = {"w": jnp.arange(8.0).reshape(2, 4), "b": jnp.zeros(4)}
+    opt = adamw(1e-3)
+    st = TrainState.create(params, opt, rng=jax.random.PRNGKey(3))
+    d = tmp_path / "run.npz.bak"
+    d.mkdir()
+    path = str(d / "ck.npz")
+    checkpoint.save(path, st._asdict(), metadata={"step": 11})
+    # the sidecar must land NEXT to the .npz, not at a mangled path
+    assert (d / "ck.meta.json").exists()
+    assert checkpoint.load_metadata(path)["step"] == 11
+
+    template = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), st._asdict())
+    out = checkpoint.restore(path, template)
+    restored = TrainState(**out)
+    np.testing.assert_array_equal(np.asarray(restored.params["w"]),
+                                  np.arange(8.0).reshape(2, 4))
+    assert type(restored.opt_state).__name__ == "AdamWState"
+    assert int(restored.step) == 0
+    np.testing.assert_array_equal(np.asarray(restored.rng),
+                                  np.asarray(jax.random.PRNGKey(3)))
+
+
+def test_sharded_save_restores_to_host(tmp_path):
+    """A tree saved from mesh-sharded arrays restores onto a host template
+    (no .sharding) as plain host-resident arrays with identical values."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    sharding = NamedSharding(mesh, PartitionSpec())
+    tree = {"w": jax.device_put(jnp.arange(12.0).reshape(3, 4), sharding)}
+    path = str(tmp_path / "sharded.npz")
+    checkpoint.save(path, tree)
+    template = {"w": jax.ShapeDtypeStruct((3, 4), jnp.float32)}
+    out = checkpoint.restore(path, template)
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.arange(12.0).reshape(3, 4))
+
+
 def test_restore_into_different_dtype_fails_loudly(tmp_path):
     path = str(tmp_path / "ck.npz")
     checkpoint.save(path, {"w": jnp.ones((2, 2))})

@@ -82,3 +82,22 @@ def test_greedy_generate_runs():
     out = greedy_generate(params, cfg, prompt, 6)
     assert out.shape == (2, 6)
     assert bool((out >= 0).all()) and bool((out < cfg.padded_vocab).all())
+
+
+def test_greedy_generate_single_token_skips_decode(monkeypatch):
+    """n_new=1 is answered entirely from the prefill logits: shape (B, 1)
+    and the decode step is never invoked."""
+    from repro.train import serve
+
+    cfg = _cfg()
+    params = transformer.lm_init(jax.random.PRNGKey(4), cfg)
+    prompt = jax.random.randint(jax.random.PRNGKey(5), (3, 8), 0, cfg.vocab)
+
+    def forbidden_decode_step(cfg, impl="chunked", task=None):
+        def decode(*a, **kw):
+            raise AssertionError("decode loop entered for n_new=1")
+        return decode
+
+    monkeypatch.setattr(serve, "make_decode_step", forbidden_decode_step)
+    out = serve.greedy_generate(params, cfg, prompt, 1)
+    assert out.shape == (3, 1)
