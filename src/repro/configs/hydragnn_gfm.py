@@ -19,3 +19,18 @@ def smoke() -> ArchConfig:
     return CONFIG.replace(gnn_hidden=64, gnn_layers=2, head_hidden=32,
                           head_layers=2, max_atoms=16, max_edges=64,
                           n_tasks=3, remat=False)
+
+
+def datapipe_defaults(sources) -> dict:
+    """Paper-shaped input-pipeline knobs for a Session over these sources:
+    temperature-2 imbalance-aware mixing (flattens the ~6x source-size
+    spread without going fully uniform) and a 4x4 size-bucket grid planned
+    from the data. Splat into SessionConfig:
+
+        SessionConfig(model="gfm-mtl", arch=CONFIG,
+                      **datapipe_defaults(sources), ...)
+    """
+    from repro.data.bucketing import BucketSpec
+    from repro.data.mixing import MixingConfig
+    return {"mixing": MixingConfig(temperature=2.0),
+            "bucketing": BucketSpec.from_sources(sources)}

@@ -69,7 +69,8 @@ def make_gfm_mtl(cfg, n_tasks: int, force_weight: float = 1.0,
         ls, (e_errs, f_errs) = jax.vmap(per_task)(hp, batch)
         return ls, {"energy_mse": e_errs, "force_mse": f_errs}
 
-    return MultiTaskModel(init=init, loss_fn=loss_fn, name=f"gfm-mtl-{n_tasks}")
+    return MultiTaskModel(init=init, loss_fn=loss_fn,
+                          name=f"gfm-mtl-{n_tasks}", n_tasks=n_tasks)
 
 
 def gfm_eval_fn(cfg):
@@ -119,4 +120,5 @@ def make_lm_multitask(cfg, impl="chunked") -> MultiTaskModel:
         ls = jax.vmap(per_task)(hp["w"], batch["tokens"], batch["labels"])
         return ls, {}
 
-    return MultiTaskModel(init=init, loss_fn=loss_fn, name=f"lm-mtl-{cfg.name}")
+    return MultiTaskModel(init=init, loss_fn=loss_fn,
+                          name=f"lm-mtl-{cfg.name}", n_tasks=cfg.n_tasks)

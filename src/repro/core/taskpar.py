@@ -54,10 +54,14 @@ class MTPConfig:
 
 class MultiTaskModel(NamedTuple):
     """init -> {"shared": ..., "heads": stacked-leading-task-dim}.
-    loss_fn(shared, heads, batch) -> (per_task_loss: (n_tasks,), metrics)."""
+    loss_fn(shared, heads, batch) -> (per_task_loss: (n_tasks,), metrics).
+    n_tasks: number of heads/branches (0 = unknown, for hand-built bundles;
+    the repo's builders always set it — Session uses it to pair data sources
+    with heads)."""
     init: Callable
     loss_fn: Callable
     name: str = "mtl"
+    n_tasks: int = 0
 
 
 # ---------------------------------------------------------------------------

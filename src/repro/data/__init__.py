@@ -1,3 +1,6 @@
-from . import lm_data, loader, prefetch, synthetic_atoms  # noqa: F401
-from .loader import GroupBatcher  # noqa: F401
+from . import (bucketing, lm_data, loader, mixing, prefetch,  # noqa: F401
+               synthetic_atoms)
+from .bucketing import BucketingBatcher, BucketSpec  # noqa: F401
+from .loader import GroupBatcher, SingleBatcher  # noqa: F401
+from .mixing import MixingBatcher, MixingConfig, mix_weights  # noqa: F401
 from .prefetch import Prefetcher  # noqa: F401

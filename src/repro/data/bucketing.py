@@ -1,0 +1,201 @@
+"""Size-bucketed dynamic batching — stop paying worst-case (A, E) padding.
+
+Every graph batch in this repo is padded to ONE global shape
+(``max_atoms``, ``max_edges``): the paper config pads every structure to
+(64, 2048) even though most sources top out at ~32 atoms and a few hundred
+radius-graph edges. The fused EGNN kernels do O(E) work on pad edges and
+O(A) on pad nodes, so the pad fraction is wall-clock waste, not just memory
+("Towards Training Billion Parameter Graph Neural Networks for Atomic
+Simulations" makes size-aware batching the enabling trick for large graph
+batches).
+
+This module trims that waste while keeping the sample stream EXACT:
+
+  * ``BucketSpec`` — a small grid of padded shapes (atom ceilings x edge
+    ceilings). ``BucketSpec.from_sources`` plans the grid from the data's
+    per-sample node/edge count quantiles.
+  * ``BucketingBatcher`` — wraps ANY ``next_batch()`` batcher
+    (``GroupBatcher`` task-major, ``MixingBatcher``/``SingleBatcher`` flat,
+    ``PrefetchingBatcher``) and re-pads each emitted batch down to the
+    smallest bucket shape that holds the batch's real content. The samples,
+    their order, and their values are untouched — only trailing padding is
+    dropped — so the stream is the single-shape stream minus pad, and every
+    determinism/checkpoint property of the wrapped batcher carries over
+    (``state()``/``restore()`` delegate).
+
+Because shapes are quantized to the bucket grid, a jitted train step
+compiles at most ``len(atom_buckets) * len(edge_buckets)`` variants (vs one
+per distinct content size if batches were trimmed exactly), amortized over
+the whole run — the classic bucketing compromise between pad waste and
+recompilation.
+
+Contract with the kernels: pad rows must be TRAILING (``node_mask`` /
+``edge_mask`` front-packed, as every source in this repo emits) and masked
+edges are re-pointed at the trimmed batch's pad sentinel ``A_pad`` — the
+``>= n_nodes`` sentinel contract shared by ``segment_sum`` and the fused
+``egnn_edge`` kernels (see ``docs/kernels.md``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+ATOM_KEYS = ("species", "pos", "node_mask", "forces")
+EDGE_KEYS = ("edge_src", "edge_dst", "edge_mask")
+
+
+def _ceil_grid(counts: np.ndarray, n_buckets: int, cap: int,
+               multiple: int) -> tuple:
+    """Ascending pad ceilings covering ``counts``: quantile cut points
+    rounded up to ``multiple``, deduplicated, capped by (and always
+    including) ``cap`` so every sample has a bucket."""
+    qs = np.quantile(counts, np.linspace(0, 1, n_buckets + 1)[1:])
+    grid = sorted({min(int(-(-max(q, 1) // multiple) * multiple), cap)
+                   for q in qs} | {cap})
+    return tuple(grid)
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketSpec:
+    """A small grid of padded graph shapes.
+
+    ``atom_buckets``/``edge_buckets``: ascending pad ceilings; the last
+    entry must dominate every sample (``from_sources`` guarantees this by
+    construction — it always includes the stored pad shape)."""
+    atom_buckets: tuple
+    edge_buckets: tuple
+
+    def __post_init__(self):
+        for name, g in (("atom", self.atom_buckets),
+                        ("edge", self.edge_buckets)):
+            assert len(g) >= 1 and list(g) == sorted(set(g)), \
+                f"{name}_buckets must be ascending and unique, got {g}"
+
+    @property
+    def n_shapes(self) -> int:
+        return len(self.atom_buckets) * len(self.edge_buckets)
+
+    def ceil(self, n_atoms: int, n_edges: int) -> tuple:
+        """Smallest (A_pad, E_pad) bucket shape holding the given content.
+        Counts beyond the grid raise — the planner must cover the data."""
+        a = next((b for b in self.atom_buckets if b >= n_atoms), None)
+        e = next((b for b in self.edge_buckets if b >= n_edges), None)
+        assert a is not None, f"{n_atoms} atoms exceeds grid {self.atom_buckets}"
+        assert e is not None, f"{n_edges} edges exceeds grid {self.edge_buckets}"
+        return a, e
+
+    @classmethod
+    def from_sources(cls, sources, *, n_atom_buckets: int = 4,
+                     n_edge_buckets: int = 4, atom_multiple: int = 8,
+                     edge_multiple: int = 64) -> "BucketSpec":
+        """Plan the grid from per-sample node/edge counts (quantile cuts,
+        rounded up to hardware-friendly multiples). sources: dicts with
+        ``node_mask``/``edge_mask`` arrays, ``SourceData`` objects, or
+        gather-style readers (``__len__`` + ``gather``, e.g.
+        ``ShardedSource``). Planning touches every sample's MASKS once —
+        gather-style sources are read in chunks and only the per-sample
+        counts are kept, never the whole dataset (the reader's own shard
+        cache warms as a side effect, same as training would)."""
+        def mask_counts(s):
+            """-> per-sample (n_atoms, n_edges, A_cap, E_cap) for one
+            source, without materializing more than a chunk of it."""
+            if hasattr(s, "gather"):
+                a_counts, e_counts = [], []
+                a_cap = e_cap = 0
+                for start in range(0, len(s), 4096):
+                    sub = s.gather(np.arange(start, min(start + 4096, len(s))))
+                    nm, em = np.asarray(sub["node_mask"]), \
+                        np.asarray(sub["edge_mask"])
+                    a_counts.append(nm.sum(-1).ravel())
+                    e_counts.append(em.sum(-1).ravel())
+                    a_cap, e_cap = nm.shape[-1], em.shape[-1]
+                return (np.concatenate(a_counts), np.concatenate(e_counts),
+                        a_cap, e_cap)
+            nm = np.asarray(s["node_mask"] if isinstance(s, dict)
+                            else s.node_mask)
+            em = np.asarray(s["edge_mask"] if isinstance(s, dict)
+                            else s.edge_mask)
+            return (nm.sum(-1).ravel(), em.sum(-1).ravel(),
+                    nm.shape[-1], em.shape[-1])
+
+        per_source = [mask_counts(s) for s in sources]
+        atoms = np.concatenate([p[0] for p in per_source])
+        edges = np.concatenate([p[1] for p in per_source])
+        a_cap = per_source[0][2]
+        e_cap = per_source[0][3]
+        return cls(_ceil_grid(atoms, n_atom_buckets, a_cap, atom_multiple),
+                   _ceil_grid(edges, n_edge_buckets, e_cap, edge_multiple))
+
+
+def pad_fraction(batch: dict) -> dict:
+    """Fraction of pad rows in one batch: ``{"atoms": ..., "edges": ...}``.
+    This is the wall-clock-waste metric bench_datapipe.py tracks."""
+    return {"atoms": 1.0 - float(np.mean(batch["node_mask"])),
+            "edges": 1.0 - float(np.mean(batch["edge_mask"]))}
+
+
+class BucketingBatcher:
+    """Re-pad every batch of a wrapped batcher down to its bucket shape.
+
+    Works on flat ``(B, A, ...)`` and task-major ``(T, B, A, ...)`` batches
+    (the atom/edge axis is located from ``node_mask.ndim``). Keys outside
+    ``ATOM_KEYS``/``EDGE_KEYS`` pass through untouched (e.g. ``energy``,
+    ``source_id``).
+
+    strict (default True): assert per batch that trimming dropped no real
+    atom/edge (masks must be front-packed — the contract every store/
+    generator in this repo satisfies). Costs two mask sums per batch; set
+    False on hot paths once a pipeline is validated."""
+
+    def __init__(self, batcher, spec: BucketSpec, *, strict: bool = True):
+        self.batcher = batcher
+        self.spec = spec
+        self.strict = strict
+        self.shapes_seen: set = set()   # distinct (A_pad, E_pad) emitted
+
+    def next_batch(self) -> dict:
+        b = self.batcher.next_batch()
+        nm, em = np.asarray(b["node_mask"]), np.asarray(b["edge_mask"])
+        axis = nm.ndim - 1               # atom/edge axis: 1 flat, 2 task-major
+        a_pad, e_pad = self.spec.ceil(int(nm.sum(-1).max(initial=0)),
+                                      int(em.sum(-1).max(initial=0)))
+        self.shapes_seen.add((a_pad, e_pad))
+        out = {}
+        for k, v in b.items():
+            v = np.asarray(v)
+            if k in ATOM_KEYS:
+                v = v[(slice(None),) * axis + (slice(0, a_pad),)]
+            elif k in EDGE_KEYS:
+                v = v[(slice(None),) * axis + (slice(0, e_pad),)]
+            out[k] = v
+        # masked edges -> the TRIMMED pad sentinel (>= n_nodes contract);
+        # stored values point at the stored shape's A and would still be
+        # "out of range", but re-pointing keeps the invariant explicit and
+        # the gather clamps cheap
+        em_t = out["edge_mask"]
+        for k in ("edge_src", "edge_dst"):
+            out[k] = np.where(em_t, out[k], a_pad).astype(out[k].dtype)
+        if self.strict:
+            assert out["node_mask"].sum() == nm.sum(), \
+                "bucket trim dropped real atoms — node_mask not front-packed"
+            assert em_t.sum() == em.sum(), \
+                "bucket trim dropped real edges — edge_mask not front-packed"
+        return out
+
+    # -- delegation ---------------------------------------------------------
+
+    def state(self) -> dict:
+        # bucketing is a pure function of the wrapped stream — no own state
+        return self.batcher.state()
+
+    def restore(self, state: dict):
+        self.batcher.restore(state)
+
+    @property
+    def sources(self):
+        return self.batcher.sources
+
+    def close(self):
+        if hasattr(self.batcher, "close"):
+            self.batcher.close()

@@ -37,6 +37,10 @@ class GroupBatcher:
         self.sources = sources
         self.B = batch_per_task
         self.rngs = [np.random.default_rng(seed + i) for i in range(len(sources))]
+        # _perm_rng[t] = rng state BEFORE the current permutation was drawn:
+        # state() serializes that (O(1) per source) instead of the
+        # permutation itself, and restore() regenerates the permutation
+        self._perm_rng = [r.bit_generator.state for r in self.rngs]
         self.perm = [r.permutation(_source_len(s)) for r, s in
                      zip(self.rngs, sources)]
         self.cursor = [0] * len(sources)
@@ -51,6 +55,7 @@ class GroupBatcher:
             idx.extend(self.perm[t][c: c + take])
             c += take
             if c >= n:
+                self._perm_rng[t] = self.rngs[t].bit_generator.state
                 self.perm[t] = self.rngs[t].permutation(n)
                 c = 0
         self.cursor[t] = c
@@ -66,6 +71,26 @@ class GroupBatcher:
         return {k: np.stack([np.asarray(r[k]) for r in rows], axis=0)
                 for k in rows[0]}
 
+    # -- checkpointing (JSON-serializable; see docs/data.md) ----------------
+
+    def state(self) -> dict:
+        """O(n_sources) snapshot — permutations are regenerated from the
+        stored rng states on restore, never serialized."""
+        return {"kind": "GroupBatcher",
+                "perm_rng": list(self._perm_rng),
+                "cursor": list(self.cursor)}
+
+    def restore(self, state: dict):
+        assert state.get("kind") == "GroupBatcher", state.get("kind")
+        assert len(state["perm_rng"]) == len(self.rngs), (
+            f"snapshot has {len(state['perm_rng'])} sources, batcher has "
+            f"{len(self.rngs)} — restore into a matching construction")
+        for t, st in enumerate(state["perm_rng"]):
+            self.rngs[t].bit_generator.state = st
+            self._perm_rng[t] = st
+            self.perm[t] = self.rngs[t].permutation(len(self.perm[t]))
+        self.cursor = list(state["cursor"])
+
 
 class SingleBatcher:
     """Flat (no task dim) uniform-random batcher over one source dict —
@@ -80,3 +105,10 @@ class SingleBatcher:
     def next_batch(self) -> dict:
         idx = self.rng.integers(0, self.n, self.B)
         return {k: np.asarray(v[idx]) for k, v in self.source.items()}
+
+    def state(self) -> dict:
+        return {"kind": "SingleBatcher", "rng": self.rng.bit_generator.state}
+
+    def restore(self, state: dict):
+        assert state.get("kind") == "SingleBatcher", state.get("kind")
+        self.rng.bit_generator.state = state["rng"]

@@ -1,0 +1,201 @@
+"""Multi-source mixing sampler — imbalance-aware source weighting.
+
+The paper pre-trains on five sources whose sizes differ by ~6x (Transition1x
+alone is ~40% of the 24M+ structures). A fixed per-source round-robin
+(``GroupBatcher``) keeps every head busy but gives small sources the same
+gradient share as large ones only via the loss; for SINGLE-head models over
+mixed data (the paper's GFM-Baseline-All) the batch composition itself is
+the knob. This module owns that knob:
+
+  * ``mix_weights`` — per-source sampling weights from source sizes:
+    ``w_s ∝ n_s^(1/temperature)``, normalized. ``temperature=1`` is
+    proportional sampling (an epoch of the pooled data), ``temperature→∞``
+    is uniform, and values in between flatten the imbalance — the standard
+    multilingual-pretraining temperature trick carried to multi-fidelity
+    atomistic sources.
+  * ``MixingBatcher`` — flat (no task dim) batcher over N sources whose
+    batches are composed according to those weights by a DETERMINISTIC
+    schedule (smooth weighted round-robin, not multinomial draws): after k
+    batches, source s has contributed ``k*B*w_s`` samples to within
+    ``len(sources)`` — so the realized mixture tracks the target weights
+    exactly, not just in expectation. Within each source, samples follow
+    the same shuffled-cyclic epoch semantics as ``GroupBatcher``.
+
+Both speak the ``next_batch()`` contract, so ``Prefetcher`` and
+``BucketingBatcher`` wrap a ``MixingBatcher`` unchanged, and its
+``state()``/``restore()`` make the stream checkpointable (see
+``docs/data.md``).
+
+For MULTI-head (task-major) sessions every head must see its own source
+every step, so batch composition is fixed; there the same weights apply as
+per-task LOSS weights instead — ``Session`` wires ``SessionConfig.mixing``
+to whichever lever fits the model flavour.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .loader import _source_len
+
+
+@dataclasses.dataclass(frozen=True)
+class MixingConfig:
+    """Declarative mixing policy. ``weights=None`` derives imbalance-aware
+    defaults from the source sizes via ``mix_weights(sizes, temperature)``;
+    explicit ``weights`` (any positive scale — they are normalized) win."""
+    temperature: float = 1.0
+    weights: tuple | None = None
+    # emit a "source_id" (B,) int32 key in every batch (e.g. for per-source
+    # metrics over a mixed stream); off by default so batch pytrees keep the
+    # exact key set the model losses expect
+    emit_source: bool = False
+
+    def resolve(self, sizes) -> np.ndarray:
+        return mix_weights(sizes, temperature=self.temperature,
+                           weights=self.weights)
+
+
+def mix_weights(sizes, *, temperature: float = 1.0,
+                weights=None) -> np.ndarray:
+    """Normalized per-source sampling weights.
+
+    sizes: per-source sample counts. With ``weights=None``:
+    ``w_s ∝ sizes[s] ** (1/temperature)`` — proportional at 1.0, uniform as
+    temperature → ∞. Explicit ``weights`` override the size-derived rule and
+    are only normalized."""
+    if weights is not None:
+        w = np.asarray(weights, np.float64)
+        assert w.ndim == 1 and (w > 0).all(), \
+            f"explicit mixing weights must be positive, got {w}"
+    else:
+        assert temperature > 0, f"temperature must be > 0, got {temperature}"
+        n = np.asarray([float(s) for s in sizes], np.float64)
+        assert (n > 0).all(), f"source sizes must be positive, got {n}"
+        w = n ** (1.0 / temperature)
+    return w / w.sum()
+
+
+class MixingBatcher:
+    """Weighted mixture batcher over N sources -> flat ``(B, ...)`` batches.
+
+    sources: dicts of equal-structure numpy arrays (dim 0 = sample dim) or
+    gather-style readers (``__len__`` + ``gather(idx) -> dict``, e.g.
+    ``ShardedSource``). All sources must share a key set (drop per-source
+    extras via ``drop_keys``).
+
+    Schedule: each of the B slots goes to the source with the highest
+    accumulated credit (``credit += w`` per slot, winner pays 1 — smooth
+    weighted round-robin), then the composition order within the batch is a
+    seeded shuffle — deterministic, counts are non-negative by
+    construction, and realized proportions track the weights exactly.
+    Per-source sample order is shuffled-cyclic (every sample of a source
+    visited once per local epoch, reshuffled on wraparound).
+    """
+
+    def __init__(self, sources: list, batch: int, *,
+                 mixing: MixingConfig | None = None, seed: int = 0,
+                 drop_keys=(), task_major: bool = False):
+        assert len(sources) >= 1, "MixingBatcher needs at least one source"
+        self.sources = list(sources)
+        self.B = batch
+        self.mixing = mixing or MixingConfig()
+        # task_major=True prepends a length-1 task dim to every leaf —
+        # the batch shape a single-branch MultiTaskModel (gfm-baseline over
+        # a mixture) expects from its task-major loss
+        self.task_major = task_major
+        self.sizes = [_source_len(s) for s in self.sources]
+        self.weights = self.mixing.resolve(self.sizes)
+        self.drop = set(drop_keys)
+        # one rng for the batch-composition shuffle + one per source for the
+        # epoch permutations (mirrors GroupBatcher's per-source streams).
+        # _perm_rng[s] is each rng's state BEFORE its current permutation
+        # was drawn — state() stores that instead of the O(source-size)
+        # permutation itself, and restore() regenerates the permutation
+        self.rng = np.random.default_rng(seed)
+        self.rngs = [np.random.default_rng(seed + 1 + i)
+                     for i in range(len(self.sources))]
+        self._perm_rng = [r.bit_generator.state for r in self.rngs]
+        self.perm = [r.permutation(n) for r, n in zip(self.rngs, self.sizes)]
+        self.cursor = [0] * len(self.sources)
+        self.credit = np.zeros(len(self.sources), np.float64)
+
+    # -- deterministic schedule --------------------------------------------
+
+    def _counts(self) -> np.ndarray:
+        """Per-source sample counts for the next batch (sums to B, every
+        count >= 0). Smooth weighted round-robin: the per-source credit
+        drift stays bounded, so cumulative counts track ``k*B*w_s``."""
+        counts = np.zeros(len(self.weights), np.int64)
+        for _ in range(self.B):
+            self.credit += self.weights
+            pick = int(np.argmax(self.credit))
+            self.credit[pick] -= 1.0
+            counts[pick] += 1
+        return counts
+
+    def _take(self, s: int, k: int) -> np.ndarray:
+        """k sample indices from source s, shuffled-cyclic."""
+        n = len(self.perm[s])
+        idx = []
+        c = self.cursor[s]
+        while len(idx) < k:
+            take = min(k - len(idx), n - c)
+            idx.extend(self.perm[s][c: c + take])
+            c += take
+            if c >= n:
+                self._perm_rng[s] = self.rngs[s].bit_generator.state
+                self.perm[s] = self.rngs[s].permutation(n)
+                c = 0
+        self.cursor[s] = c
+        return np.asarray(idx, np.int64)
+
+    def next_batch(self) -> dict:
+        counts = self._counts()
+        rows, src_ids = [], []
+        for s, k in enumerate(counts):
+            if k == 0:
+                continue
+            idx = self._take(s, int(k))
+            src = self.sources[s]
+            row = src.gather(idx) if hasattr(src, "gather") else \
+                {kk: v[idx] for kk, v in src.items()}
+            rows.append({kk: np.asarray(v) for kk, v in row.items()
+                         if kk not in self.drop})
+            src_ids.append(np.full(int(k), s, np.int32))
+        order = self.rng.permutation(self.B)
+        batch = {k: np.concatenate([r[k] for r in rows], axis=0)[order]
+                 for k in rows[0]}
+        if self.mixing.emit_source:
+            batch["source_id"] = np.concatenate(src_ids)[order]
+        if self.task_major:
+            batch = {k: v[None] for k, v in batch.items()}
+        return batch
+
+    # -- checkpointing ------------------------------------------------------
+
+    def state(self) -> dict:
+        """O(n_sources) snapshot (permutations are NOT serialized — only
+        the rng state that generated them), cheap enough for the prefetch
+        producer to capture per batch."""
+        return {
+            "kind": "MixingBatcher",
+            "rng": self.rng.bit_generator.state,
+            "perm_rng": list(self._perm_rng),
+            "cursor": list(self.cursor),
+            "credit": self.credit.tolist(),
+        }
+
+    def restore(self, state: dict):
+        assert state.get("kind") == "MixingBatcher", state.get("kind")
+        assert len(state["perm_rng"]) == len(self.rngs), (
+            f"snapshot has {len(state['perm_rng'])} sources, batcher has "
+            f"{len(self.rngs)} — restore into a matching construction")
+        self.rng.bit_generator.state = state["rng"]
+        for s, st in enumerate(state["perm_rng"]):
+            self.rngs[s].bit_generator.state = st
+            self._perm_rng[s] = st
+            self.perm[s] = self.rngs[s].permutation(self.sizes[s])
+        self.cursor = list(state["cursor"])
+        self.credit = np.asarray(state["credit"], np.float64)

@@ -22,6 +22,16 @@ wrapped batcher past what the consumer saw — so hold ONE Prefetcher for the
 batcher's whole lifetime instead of re-wrapping per loop (``Session`` keeps
 its prefetcher across ``run()`` calls for exactly this reason; queued
 batches are simply consumed by the next run).
+
+Checkpointing closes exactly that gap: when the wrapped batcher is
+checkpointable (``state()``/``restore()``), the producer snapshots the
+batcher state AFTER drawing each batch and ships it through the queue with
+the batch, and ``Prefetcher.state()`` returns the snapshot of the last batch
+the CONSUMER actually received — never crediting read-ahead the training
+loop hasn't seen. ``restore(state)`` halts the producer, discards its
+read-ahead, rewinds the batcher, and restarts — so a resumed run replays the
+stream from the first unconsumed batch, byte-identically
+(tests/test_datapipe_checkpoint.py).
 """
 from __future__ import annotations
 
@@ -48,8 +58,23 @@ class Prefetcher:
         assert depth >= 1, f"prefetch depth must be >= 1, got {depth}"
         self.batcher = batcher
         self.transform = transform
-        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self.depth = depth
+        # consumer-visible stream position: state as of the last batch
+        # handed out by next_batch() (initially: before any batch).
+        # Trackability is probed by CALLING state(), not hasattr — a
+        # delegating wrapper (e.g. BucketingBatcher) always has the method
+        # but raises when its inner batcher is not checkpointable
+        try:
+            self._consumed_state = batcher.state()
+            self._trackable = True
+        except (AttributeError, TypeError):
+            self._consumed_state = None
+            self._trackable = False
         self._err: BaseException | None = None
+        self._start()
+
+    def _start(self):
+        self._q: queue.Queue = queue.Queue(maxsize=self.depth)
         self._stop = threading.Event()
         self._thread = threading.Thread(
             target=self._produce, name="prefetcher", daemon=True)
@@ -69,26 +94,32 @@ class Prefetcher:
         try:
             while not self._stop.is_set():
                 b = self.batcher.next_batch()
+                # snapshot BEFORE transform (transform is placement, not
+                # stream position) and after the draw: restoring to this
+                # snapshot replays the stream from the NEXT batch
+                st = self.batcher.state() if self._trackable else None
                 if self.transform is not None:
                     b = self.transform(b)
-                self._put(b)
+                self._put((b, st))
         except BaseException as e:  # propagate to the consumer
             self._err = e
-            self._put(self._DONE)
+            self._put((self._DONE, None))
 
     def next_batch(self):
         if self._err is not None and self._q.empty():
             raise self._err          # producer already died; don't block
         if self._stop.is_set():      # closed: drain or raise, never hang
             try:
-                item = self._q.get_nowait()
+                item, st = self._q.get_nowait()
             except queue.Empty:
                 raise RuntimeError("Prefetcher is closed") from self._err
         else:
-            item = self._q.get()
+            item, st = self._q.get()
         if item is self._DONE:
             self._stop.set()
             raise self._err
+        if st is not None:
+            self._consumed_state = st
         return item
 
     # iterator protocol, so a Prefetcher drops into train_loop(batches=...)
@@ -98,8 +129,41 @@ class Prefetcher:
     def __next__(self):
         return self.next_batch()
 
-    def close(self):
-        """Stop the producer and discard queued batches. Idempotent."""
+    # -- checkpointing ------------------------------------------------------
+
+    def state(self) -> dict:
+        """Wrapped-batcher state as of the last batch the consumer received
+        (producer read-ahead is NOT credited — it will be re-drawn after a
+        restore)."""
+        if not self._trackable:
+            raise TypeError(
+                f"{type(self.batcher).__name__} has no state()/restore(); "
+                "wrap a checkpointable batcher to checkpoint the pipeline")
+        return self._consumed_state
+
+    def restore(self, state: dict):
+        """Rewind the pipeline to a ``state()`` snapshot: halt the producer,
+        discard its read-ahead, restore the batcher, restart. Also revives a
+        closed Prefetcher."""
+        if not self._trackable:
+            raise TypeError(
+                f"{type(self.batcher).__name__} has no state()/restore()")
+        self._halt()
+        if self._thread.is_alive():
+            # a producer stuck past _halt's join timeout would race the new
+            # producer on the same batcher and corrupt the rewound stream
+            raise RuntimeError(
+                "prefetch producer did not stop within the join timeout; "
+                "cannot restore safely while it may still draw batches")
+        self.batcher.restore(state)
+        self._consumed_state = self.batcher.state()
+        self._err = None
+        self._start()
+
+    # -- shutdown -----------------------------------------------------------
+
+    def _halt(self):
+        """Stop the producer and discard queued batches."""
         self._stop.set()
         # unblock a producer stuck in _put, then drain — twice: the first
         # drain can free a slot that the producer's in-flight put fills
@@ -111,6 +175,12 @@ class Prefetcher:
             except queue.Empty:
                 pass
             self._thread.join(timeout=5.0)
+
+    def close(self):
+        """Stop the producer and discard queued batches. Idempotent.
+        (``restore()`` revives a closed Prefetcher; ``next_batch()`` on a
+        closed one raises.)"""
+        self._halt()
 
     def __enter__(self):
         return self

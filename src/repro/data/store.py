@@ -46,8 +46,19 @@ def write_store(path: str, arrays: dict[str, np.ndarray], *,
         shards.append({"file": fname, "start": start, "stop": stop})
     manifest = {"n_samples": n, "keys": sorted(arrays),
                 "shard_size": shard_size, "shards": shards}
-    with open(os.path.join(path, "manifest.json"), "w") as f:
+    # atomic MANIFEST publish: write to a temp file in the SAME directory,
+    # then os.replace — an interrupted writer leaves either the old
+    # manifest or none at all, never a truncated JSON that ShardedSource
+    # crashes parsing. Scope: shard .npz files are NOT transactional — an
+    # interrupted REwrite of an existing store can leave new shard bytes
+    # under the old manifest; write to a fresh directory to replace a store
+    final = os.path.join(path, "manifest.json")
+    tmp = final + ".tmp"
+    with open(tmp, "w") as f:
         json.dump(manifest, f, indent=1)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, final)
     return manifest
 
 

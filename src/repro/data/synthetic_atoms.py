@@ -169,6 +169,46 @@ def generate_all(n_per_source: int, *, max_atoms=32, max_edges=256, seed=0,
             for name in (sources or SOURCES)}
 
 
+# approximate RELATIVE sizes of the paper's five training sets (structure
+# counts, §4.1 — ~24M total with a ~6x spread between the largest and
+# smallest source). Only the ratios matter here: generate_mixture scales
+# them down to a requested total while keeping the imbalance shape.
+PAPER_REL_SIZES = {
+    "ani1x": 4.9, "qm7x": 4.2, "transition1x": 9.7,
+    "mptrj": 1.6, "alexandria": 3.1,
+}
+
+
+def generate_mixture(total: int, *, max_atoms=32, max_edges=256, seed=0,
+                     rel_sizes=None) -> dict[str, SourceData]:
+    """Five-source paper-shaped mixture: all SOURCES, with per-source sample
+    counts proportional to the paper's dataset-size imbalance (largest-
+    remainder apportionment of ``total``; every source gets >= 1 sample).
+    This is the fixture the mixing/bucketing subsystem and
+    ``benchmarks/bench_datapipe.py`` are exercised against."""
+    rel = rel_sizes or PAPER_REL_SIZES
+    names = list(rel)
+    w = np.asarray([rel[n] for n in names], np.float64)
+    w = w / w.sum()
+    counts = np.maximum(np.floor(total * w).astype(int), 1)
+    # largest remainder tops up to the exact total (deterministic)
+    for i in np.argsort(-(total * w - counts), kind="stable"):
+        if counts.sum() >= total:
+            break
+        counts[i] += 1
+    return {name: generate_source(name, int(c), max_atoms=max_atoms,
+                                  max_edges=max_edges, seed=seed)
+            for name, c in zip(names, counts)}
+
+
+def source_dicts(data: dict[str, SourceData], *, keys=(
+        "species", "pos", "edge_src", "edge_dst", "node_mask", "edge_mask",
+        "energy", "forces")) -> list[dict]:
+    """SourceData objects -> the list-of-dicts shape Session/batchers take
+    (one dict of numpy arrays per source, insertion order preserved)."""
+    return [{k: getattr(sd, k) for k in keys} for sd in data.values()]
+
+
 def to_batch_dict(sd: SourceData, idx: np.ndarray) -> dict:
     return {
         "species": jnp.array(sd.species[idx]),

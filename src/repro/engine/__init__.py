@@ -25,7 +25,18 @@ Performance knobs a session picks up from its configs:
     (see ``repro.models.gnn``);
   * ``SessionConfig.prefetch`` (default on) — async double-buffered input
     pipeline: batch assembly and device placement run on a background
-    thread and overlap the running step (``repro.data.prefetch``).
+    thread and overlap the running step (``repro.data.prefetch``);
+  * ``SessionConfig.mixing`` — imbalance-aware multi-source mixing
+    (``repro.data.mixing``): weighted batch composition for single-branch
+    models, per-task loss weights for multi-head models;
+  * ``SessionConfig.bucketing`` — size-bucketed dynamic batching
+    (``repro.data.bucketing``): batches re-padded down to a small shape
+    grid so the kernels stop paying worst-case (A, E) padding.
+
+The input pipeline is checkpointable end to end: ``Session.run`` writes a
+``.datapipe.json`` sidecar next to ``ckpt_path`` and
+``Session.restore_datapipe`` resumes a byte-identical batch stream (see
+docs/data.md).
 """
 from .state import StepOutput, TrainState  # noqa: F401
 from .step import (SingleTaskModel, TrainStep, make_grad_fn,  # noqa: F401

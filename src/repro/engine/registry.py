@@ -41,8 +41,10 @@ def _gfm_mtl(cfg, *, n_tasks=None, **kw):
 
 @register_model("gfm-baseline")
 def _gfm_baseline(cfg, *, n_tasks=None, **kw):
+    """GFM-Baseline-All: ONE branch regardless of how many sources feed it
+    (over several sources, pair it with ``SessionConfig.mixing`` so the
+    single head trains on a weighted mixture — the paper's baseline)."""
     from repro.core.mtl import make_gfm_mtl
-    assert n_tasks in (None, 1), "gfm-baseline has exactly one branch"
     return make_gfm_mtl(cfg, 1, **kw)
 
 

@@ -18,7 +18,9 @@ import jax
 import numpy as np
 
 from repro.core.taskpar import MTPConfig, MultiTaskModel
-from repro.data.loader import GroupBatcher, SingleBatcher
+from repro.data.bucketing import BucketingBatcher, BucketSpec
+from repro.data.loader import GroupBatcher, SingleBatcher, _source_len
+from repro.data.mixing import MixingBatcher, MixingConfig
 from repro.optim import adamw, warmup_cosine
 from repro.train import checkpoint
 from repro.train.loop import EarlyStopping, MetricLogger, train_loop
@@ -57,6 +59,19 @@ class SessionConfig:
     # are built, never which.
     prefetch: bool = True
     prefetch_depth: int = 2
+    # multi-source mixing (repro.data.mixing): None = legacy behaviour
+    # (fixed per-task round-robin / single source). A MixingConfig, a float
+    # (shorthand for MixingConfig(temperature=...)) or a tuple of explicit
+    # per-source weights. Single-task models over a LIST of sources get a
+    # MixingBatcher (weighted batch composition); multi-task models keep
+    # one-head-per-source batches and apply the same weights as per-task
+    # LOSS weights instead (unless task_weights is set explicitly).
+    mixing: Any = None
+    # size-bucketed dynamic batching (repro.data.bucketing): None = one
+    # global pad shape. A BucketSpec, or an int n (shorthand: plan an n x n
+    # bucket grid from the session's sources) — batches are re-padded down
+    # to the smallest bucket shape holding their content.
+    bucketing: Any = None
     # misc
     seed: int = 0
     task_weights: tuple | None = None
@@ -69,6 +84,42 @@ class SessionConfig:
 
     def replace(self, **kw) -> "SessionConfig":
         return dataclasses.replace(self, **kw)
+
+
+def _as_mixing(mixing) -> MixingConfig | None:
+    """SessionConfig.mixing shorthands -> MixingConfig."""
+    if mixing is None or isinstance(mixing, MixingConfig):
+        return mixing
+    if isinstance(mixing, bool):   # bool IS int — reject the likely typo
+        raise TypeError("cfg.mixing=True/False is ambiguous — pass a "
+                        "MixingConfig, a float temperature, or None")
+    if isinstance(mixing, (int, float)):
+        return MixingConfig(temperature=float(mixing))
+    if isinstance(mixing, (tuple, list)):
+        return MixingConfig(weights=tuple(mixing))
+    raise TypeError(f"cfg.mixing: expected MixingConfig | float temperature "
+                    f"| weight tuple | None, got {type(mixing).__name__}")
+
+
+def _as_bucket_spec(bucketing, sources, batcher) -> BucketSpec:
+    """SessionConfig.bucketing shorthands -> BucketSpec (an int plans an
+    n x n grid from the session's sources)."""
+    if isinstance(bucketing, BucketSpec):
+        return bucketing
+    if isinstance(bucketing, bool):   # bool IS int — reject the likely typo
+        raise TypeError("cfg.bucketing=True/False is ambiguous — pass a "
+                        "BucketSpec, an int grid size, or None")
+    if isinstance(bucketing, int):
+        srcs = sources if isinstance(sources, (list, tuple)) else \
+            ([sources] if sources is not None
+             else getattr(batcher, "sources", None))
+        assert srcs is not None, \
+            "cfg.bucketing=<int> needs sources to plan the grid from; " \
+            "pass an explicit BucketSpec instead"
+        return BucketSpec.from_sources(srcs, n_atom_buckets=bucketing,
+                                       n_edge_buckets=bucketing)
+    raise TypeError(f"cfg.bucketing: expected BucketSpec | int | None, "
+                    f"got {type(bucketing).__name__}")
 
 
 @dataclasses.dataclass
@@ -113,22 +164,61 @@ class Session:
         # batching follows the BUILT model's flavour (works for any model
         # registered via @register_model, not just the built-in names)
         multitask = isinstance(self.model, MultiTaskModel)
+        mixing = _as_mixing(cfg.mixing)
+        task_weights = cfg.task_weights
         if batcher is None:
             if multitask:
                 assert isinstance(sources, (list, tuple)), \
                     "multi-task session takes a list of per-task sources"
-                batcher = GroupBatcher(list(sources), cfg.batch_per_task,
-                                       seed=cfg.seed)
+                heads = getattr(self.model, "n_tasks", 0) or n_tasks
+                if heads == 1 and len(sources) > 1:
+                    # single-branch model over several sources (the paper's
+                    # GFM-Baseline-All): one task row drawn from the
+                    # weighted MIXTURE of all sources
+                    assert mixing is not None, (
+                        f"model '{cfg.model}' has one branch but got "
+                        f"{len(sources)} sources — set cfg.mixing to train "
+                        "it on the mixture, or pool the sources yourself")
+                    batcher = MixingBatcher(list(sources), cfg.batch_per_task,
+                                            mixing=mixing, seed=cfg.seed,
+                                            task_major=True)
+                    n_tasks = 1
+                else:
+                    assert len(sources) == heads or heads == 0, (
+                        f"model '{cfg.model}' has {heads} branches but got "
+                        f"{len(sources)} sources")
+                    batcher = GroupBatcher(list(sources), cfg.batch_per_task,
+                                           seed=cfg.seed)
+                    if mixing is not None and task_weights is None:
+                        # every head must see ITS source every step, so
+                        # batch composition is fixed — the mixing weights
+                        # become per-task LOSS weights instead (same
+                        # imbalance lever, applied where the model flavour
+                        # allows)
+                        sizes = [_source_len(s) for s in sources]
+                        task_weights = tuple(float(w)
+                                             for w in mixing.resolve(sizes))
             else:
-                if isinstance(sources, (list, tuple)):
-                    assert len(sources) == 1, (
-                        f"single-task model '{cfg.model}' got {len(sources)} "
-                        "sources; use a multi-task model (e.g. 'lm-mtl') or "
-                        "pass one source")
-                    sources = sources[0]
-                batcher = SingleBatcher(sources, cfg.batch_per_task,
-                                        seed=cfg.seed)
+                if mixing is not None and isinstance(sources, (list, tuple)) \
+                        and len(sources) > 1:
+                    # the paper's baseline shape: ONE head over mixed data —
+                    # mixing composes each flat batch from all sources
+                    batcher = MixingBatcher(list(sources), cfg.batch_per_task,
+                                            mixing=mixing, seed=cfg.seed)
+                else:
+                    if isinstance(sources, (list, tuple)):
+                        assert len(sources) == 1, (
+                            f"single-task model '{cfg.model}' got "
+                            f"{len(sources)} sources; use a multi-task model "
+                            "(e.g. 'lm-mtl'), pass one source, or set "
+                            "cfg.mixing to train one head on the mixture")
+                        sources = sources[0]
+                    batcher = SingleBatcher(sources, cfg.batch_per_task,
+                                            seed=cfg.seed)
                 n_tasks = 1
+        if cfg.bucketing is not None:
+            batcher = BucketingBatcher(
+                batcher, _as_bucket_spec(cfg.bucketing, sources, batcher))
         self.batcher = batcher
         self.task_names = task_names or [f"task{t}" for t in range(n_tasks)]
         assert len(self.task_names) == n_tasks, \
@@ -145,12 +235,18 @@ class Session:
         self.plan = ShardingPlan(mesh=mesh, mtp=mtp, backend=cfg.backend,
                                  donate=cfg.donate)
 
+        if task_weights is not None and \
+                self.plan.resolved_backend == "shard_map":
+            raise ValueError(
+                "the shard_map backend supports uniform task weights only — "
+                "drop cfg.mixing/task_weights or use backend='pjit'")
+        self.task_weights = task_weights
         lr = warmup_cosine(cfg.lr, cfg.warmup, cfg.steps) if cfg.warmup \
             else cfg.lr
         self.optimizer = adamw(lr, weight_decay=cfg.weight_decay,
                                grad_clip=cfg.grad_clip)
         step = make_step(self.model, self.optimizer, self.plan,
-                         accum=cfg.accum, task_weights=cfg.task_weights)
+                         accum=cfg.accum, task_weights=task_weights)
         self.compiled_step = self.plan.compile(step)
 
         params = self.model.init(jax.random.PRNGKey(cfg.seed))
@@ -161,6 +257,10 @@ class Session:
         # closing it between runs would discard already-drawn batches and
         # silently shift the batcher's stream vs the synchronous path
         self._prefetcher = None
+        # consumed-position snapshot taken when the prefetcher is closed —
+        # after close() the underlying batcher sits PAST what the loop saw
+        # (discarded read-ahead), so datapipe_state() must not read it
+        self._dp_snapshot = None
 
     @classmethod
     def from_config(cls, cfg: SessionConfig, **kw) -> "Session":
@@ -176,6 +276,10 @@ class Session:
         already drawn are discarded, so only close when done with the
         session."""
         if self._prefetcher is not None:
+            try:
+                self._dp_snapshot = self._prefetcher.state()
+            except TypeError:
+                self._dp_snapshot = None
             self._prefetcher.close()
             self._prefetcher = None
 
@@ -185,6 +289,56 @@ class Session:
     def __exit__(self, *exc):
         self.close()
         return False
+
+    # -- input-pipeline checkpointing ---------------------------------------
+
+    def datapipe_state(self) -> dict | None:
+        """JSON-serializable state of the session's input pipeline, as of
+        the last batch the TRAINING LOOP consumed (prefetcher read-ahead is
+        not credited). None when the batcher isn't checkpointable (e.g. a
+        hand-rolled batcher without state()/restore())."""
+        if self._prefetcher is None and self._dp_snapshot is not None:
+            # prefetcher was closed: the live batcher sits past the
+            # consumed position (discarded read-ahead) — use the snapshot
+            # taken at close time
+            return self._dp_snapshot
+        src = self._prefetcher if self._prefetcher is not None else \
+            self.batcher
+        try:
+            return src.state()
+        except (AttributeError, TypeError):
+            return None
+
+    def restore_datapipe(self, state):
+        """Rewind the input pipeline to a ``datapipe_state()`` snapshot (or
+        a checkpoint path whose ``.datapipe.json`` sidecar holds one): the
+        next batch drawn is byte-identical to the one an uninterrupted run
+        would have drawn."""
+        if isinstance(state, str):
+            path = state
+            state = checkpoint.load_datapipe(path)
+            # a crash between the npz write and the sidecar write leaves
+            # the two describing different steps — refuse to resume a
+            # stream position that doesn't match the params
+            stamp = checkpoint.load_datapipe_step(path)
+            try:
+                meta_step = checkpoint.load_metadata(path).get("step")
+            except FileNotFoundError:
+                meta_step = None
+            if stamp is not None and meta_step is not None \
+                    and stamp != meta_step:
+                raise RuntimeError(
+                    f"checkpoint desync at {path}: params are at step "
+                    f"{meta_step} but the datapipe sidecar was written at "
+                    f"step {stamp} (crash between the two writes?) — "
+                    "resuming would replay or skip batches")
+        if self._prefetcher is not None:
+            self._prefetcher.restore(state)
+        else:
+            self.batcher.restore(state)
+        # any close-time snapshot describes the PRE-restore position —
+        # stale now that the pipeline was rewound
+        self._dp_snapshot = None
 
     def _metric_fn(self, out) -> dict:
         m = out.metrics
@@ -226,7 +380,8 @@ class Session:
                             metadata={"model": cfg.model,
                                       "arch": cfg.arch.name,
                                       "step": int(state.step),
-                                      "final_loss": final_loss})
+                                      "final_loss": final_loss},
+                            datapipe=self.datapipe_state())
         return SessionResult(
             state=state, logger=logger, final_loss=final_loss,
             last_metrics=jax.tree_util.tree_map(np.asarray, last_out.metrics),

@@ -29,6 +29,13 @@ def _meta_path(path: str) -> str:
     return base + ".meta.json"
 
 
+def _datapipe_path(path: str) -> str:
+    """Input-pipeline state sidecar (batcher/mixer/prefetcher ``state()``)
+    next to the .npz — same trailing-suffix-only strip as ``_meta_path``."""
+    base = path[:-len(".npz")] if path.endswith(".npz") else path
+    return base + ".datapipe.json"
+
+
 def _flatten(tree, prefix=""):
     out = {}
     if isinstance(tree, dict):
@@ -45,14 +52,37 @@ def _flatten(tree, prefix=""):
     return out
 
 
-def save(path: str, tree: Any, metadata: dict | None = None):
+def _write_json_atomic(path: str, obj, **dump_kw):
+    """Same-directory temp file + os.replace: an interrupted writer leaves
+    the previous sidecar (or none), never a truncated JSON — the same
+    publish discipline as ``repro.data.store.write_store``."""
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(obj, f, **dump_kw)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def save(path: str, tree: Any, metadata: dict | None = None,
+         datapipe: dict | None = None):
+    """datapipe: a batcher/prefetcher ``state()`` dict (JSON-serializable)
+    written to a ``.datapipe.json`` sidecar, so a resumed run can restore
+    the exact batch-stream position alongside the params (see
+    ``repro.engine.Session.restore_datapipe``). The sidecar is stamped
+    with ``metadata["step"]`` when present: the npz and the sidecar are
+    two files, so a crash between their writes CAN desynchronize them —
+    the stamp lets ``restore_datapipe`` detect (not prevent) that."""
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     flat = _flatten(tree)
     arrs = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
     np.savez(_npz_path(path), **arrs)
     if metadata is not None:
-        with open(_meta_path(path), "w") as f:
-            json.dump(metadata, f, indent=2)
+        _write_json_atomic(_meta_path(path), metadata, indent=2)
+    if datapipe is not None:
+        step = (metadata or {}).get("step")
+        _write_json_atomic(_datapipe_path(path),
+                           {"step": step, "state": datapipe})
 
 
 def restore(path: str, template: Any) -> Any:
@@ -88,3 +118,31 @@ def _unflatten_like(tree, flat, prefix):
 def load_metadata(path: str) -> dict:
     with open(_meta_path(path)) as f:
         return json.load(f)
+
+
+def load_datapipe(path: str) -> dict:
+    """The pipeline state from the ``.datapipe.json`` sidecar written by
+    ``save(..., datapipe=...)``. Feed it to the matching batcher/prefetcher
+    ``restore()`` (or ``Session.restore_datapipe``) to resume the exact
+    batch stream."""
+    with open(_datapipe_path(path)) as f:
+        payload = json.load(f)
+    # stamped envelope {"step", "state"} vs a raw state dict (hand-written)
+    if isinstance(payload, dict) and set(payload) == {"step", "state"}:
+        return payload["state"]
+    return payload
+
+
+def load_datapipe_step(path: str):
+    """The ``metadata["step"]`` stamp the sidecar was written with (None if
+    unstamped). Compare against ``load_metadata(path)["step"]`` to detect a
+    params/stream desync from a crash between the two writes."""
+    with open(_datapipe_path(path)) as f:
+        payload = json.load(f)
+    if isinstance(payload, dict) and set(payload) == {"step", "state"}:
+        return payload["step"]
+    return None
+
+
+def has_datapipe(path: str) -> bool:
+    return os.path.exists(_datapipe_path(path))

@@ -1,0 +1,297 @@
+"""Input-pipeline checkpointing: an interrupted-and-resumed run must draw
+the EXACT batch stream an uninterrupted run would have drawn — byte for
+byte — through every layer of the pipeline (batcher, mixer, bucketing,
+prefetcher, checkpoint sidecar, Session)."""
+import os
+
+import numpy as np
+
+from repro.data.bucketing import BucketingBatcher, BucketSpec
+from repro.data.loader import GroupBatcher, SingleBatcher
+from repro.data.mixing import MixingBatcher, MixingConfig
+from repro.data.prefetch import Prefetcher
+from repro.data.synthetic_atoms import generate_mixture, source_dicts
+
+
+def _sources(sizes, feature_offset=1000):
+    return [{"x": (feature_offset * t + np.arange(n)).astype(np.int64)}
+            for t, n in enumerate(sizes)]
+
+
+def _assert_streams_equal(ref, got):
+    for a, b in zip(ref, got):
+        assert set(a) == set(b)
+        for k in a:
+            np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+
+
+def _roundtrip(make_batcher, *, consume=7, compare=9):
+    """Interrupted run (snapshot mid-stream, rebuild, restore) vs
+    uninterrupted run: identical continuation. State must survive JSON."""
+    import json
+    uninterrupted = make_batcher()
+    for _ in range(consume):
+        uninterrupted.next_batch()
+    ref = [uninterrupted.next_batch() for _ in range(compare)]
+
+    interrupted = make_batcher()
+    for _ in range(consume):
+        interrupted.next_batch()
+    snap = json.loads(json.dumps(interrupted.state()))   # full JSON cycle
+    resumed = make_batcher()                             # fresh process sim
+    resumed.restore(snap)
+    got = [resumed.next_batch() for _ in range(compare)]
+    _assert_streams_equal(ref, got)
+
+
+def test_group_batcher_roundtrip():
+    _roundtrip(lambda: GroupBatcher(_sources([17, 5, 23]), 4, seed=11))
+
+
+def test_single_batcher_roundtrip():
+    _roundtrip(lambda: SingleBatcher({"x": np.arange(31)}, 6, seed=4))
+
+
+def test_mixing_batcher_roundtrip():
+    _roundtrip(lambda: MixingBatcher(
+        _sources([40, 9, 21]), 8,
+        mixing=MixingConfig(temperature=2.0, emit_source=True), seed=2))
+
+
+def test_bucketed_mixed_stream_roundtrip():
+    """The full ISSUE-4 stack: mixture -> bucketing, resumed mid-epoch."""
+    sources = source_dicts(generate_mixture(40, max_atoms=24, max_edges=96,
+                                            seed=0))
+    spec = BucketSpec.from_sources(sources)
+    _roundtrip(lambda: BucketingBatcher(
+        MixingBatcher(sources, 6, seed=3), spec), consume=5, compare=6)
+
+
+def test_prefetcher_state_ignores_readahead():
+    """state() credits only CONSUMED batches: whatever the producer drew
+    ahead must be re-drawn after restore."""
+    ref_b = GroupBatcher(_sources([13, 7]), 4, seed=0)
+    ref = [ref_b.next_batch() for _ in range(10)]
+
+    with Prefetcher(GroupBatcher(_sources([13, 7]), 4, seed=0),
+                    depth=2) as pf:
+        got = [pf.next_batch() for _ in range(3)]
+        snap = pf.state()          # producer is ~2 batches ahead by now
+    with Prefetcher(GroupBatcher(_sources([13, 7]), 4, seed=99),
+                    depth=2) as pf2:
+        pf2.restore(snap)
+        got += [pf2.next_batch() for _ in range(7)]
+    _assert_streams_equal(ref, got)
+
+
+def test_prefetcher_restore_revives_closed():
+    pf = Prefetcher(SingleBatcher({"x": np.arange(16)}, 4, seed=0), depth=1)
+    pf.next_batch()
+    snap = pf.state()
+    pf.close()
+    pf.restore(snap)
+    assert pf.next_batch()["x"].shape == (4,)
+    pf.close()
+
+
+def test_prefetcher_untrackable_batcher_raises():
+    import pytest
+
+    class Plain:
+        def next_batch(self):
+            return {"x": np.zeros(2)}
+
+    with Prefetcher(Plain(), depth=1) as pf:
+        pf.next_batch()
+        with pytest.raises(TypeError, match="state"):
+            pf.state()
+
+
+def test_prefetcher_over_bucketed_untrackable_batcher_works():
+    """Regression: BucketingBatcher always HAS a state() method (it
+    delegates), so trackability must be probed by calling it — a hasattr
+    check crashed Prefetcher.__init__ on this composition."""
+    import pytest
+
+    class Plain:
+        """Stateless batcher emitting tiny graph batches."""
+        def next_batch(self):
+            return {"node_mask": np.ones((2, 4), bool),
+                    "edge_mask": np.ones((2, 8), bool),
+                    "species": np.ones((2, 4), np.int32),
+                    "pos": np.zeros((2, 4, 3), np.float32),
+                    "forces": np.zeros((2, 4, 3), np.float32),
+                    "edge_src": np.zeros((2, 8), np.int32),
+                    "edge_dst": np.zeros((2, 8), np.int32)}
+
+    spec = BucketSpec((4,), (8,))
+    with Prefetcher(BucketingBatcher(Plain(), spec), depth=1) as pf:
+        assert pf.next_batch()["species"].shape == (2, 4)
+        with pytest.raises(TypeError, match="state"):
+            pf.state()
+
+
+# ---------------------------------------------------------------------------
+# checkpoint sidecar + Session
+# ---------------------------------------------------------------------------
+
+def test_datapipe_sidecar_write_is_atomic(tmp_path, monkeypatch):
+    """A crash mid-save must never leave a truncated .datapipe.json —
+    the resume path has to survive the interruptions it exists for."""
+    import pytest
+    from repro.train import checkpoint
+    gb = GroupBatcher(_sources([9, 14]), 4, seed=7)
+    path = str(tmp_path / "ck")
+    checkpoint.save(path, {"w": np.zeros(3)}, datapipe=gb.state())
+    good = checkpoint.load_datapipe(path)
+    gb.next_batch()
+
+    monkeypatch.setattr(os, "replace",
+                        lambda *a: (_ for _ in ()).throw(OSError("crash")))
+    with pytest.raises(OSError, match="crash"):
+        checkpoint.save(path, {"w": np.zeros(3)}, datapipe=gb.state())
+    monkeypatch.undo()
+    assert checkpoint.load_datapipe(path) == good   # old sidecar intact
+
+
+def test_restore_datapipe_detects_params_stream_desync(tmp_path):
+    """The npz and the sidecar are two files; a crash between their writes
+    leaves them at different steps. The step stamp makes that detectable:
+    restore_datapipe(path) refuses to pair mismatched params and stream."""
+    import pytest
+    from repro.engine import Session
+    from repro.train import checkpoint
+    sources = source_dicts(generate_mixture(24, max_atoms=12, max_edges=48,
+                                            seed=0))
+    path = str(tmp_path / "ck")
+    with Session.from_config(_session_cfg(), sources=sources) as s:
+        # simulate the crash window: params advanced to step 3, but the
+        # sidecar still carries the step-2 stamp
+        checkpoint.save(path, {"w": np.zeros(2)}, metadata={"step": 2},
+                        datapipe=s.datapipe_state())
+        checkpoint.save(path, {"w": np.ones(2)}, metadata={"step": 3})
+        with pytest.raises(RuntimeError, match="desync"):
+            s.restore_datapipe(path)
+        # matched stamps restore fine
+        checkpoint.save(path, {"w": np.ones(2)}, metadata={"step": 3},
+                        datapipe=s.datapipe_state())
+        s.restore_datapipe(path)
+
+
+def test_restore_datapipe_invalidates_close_snapshot():
+    """Regression: restore_datapipe must drop the close-time snapshot —
+    a datapipe_state() after restore describes the RESTORED position."""
+    from repro.engine import Session
+    sources = source_dicts(generate_mixture(24, max_atoms=12, max_edges=48,
+                                            seed=0))
+    cfg = _session_cfg()
+    s = Session.from_config(cfg, sources=sources)
+    early = s.datapipe_state()                  # position 0
+    s.run()
+    s.close()                                   # snapshots post-run position
+    s.restore_datapipe(early)                   # rewind to position 0
+    assert s.datapipe_state() == early, \
+        "stale close-time snapshot leaked through after restore"
+
+
+def test_checkpoint_datapipe_sidecar_roundtrip(tmp_path):
+    from repro.train import checkpoint
+    gb = GroupBatcher(_sources([9, 14]), 4, seed=7)
+    for _ in range(3):
+        gb.next_batch()
+    path = str(tmp_path / "ck")
+    checkpoint.save(path, {"w": np.zeros(3)}, metadata={"step": 3},
+                    datapipe=gb.state())
+    assert checkpoint.has_datapipe(path)
+    ref = [gb.next_batch() for _ in range(5)]
+    gb2 = GroupBatcher(_sources([9, 14]), 4, seed=7)
+    gb2.restore(checkpoint.load_datapipe(path))
+    _assert_streams_equal(ref, [gb2.next_batch() for _ in range(5)])
+
+
+def _session_cfg(**kw):
+    import jax.numpy as jnp
+    from repro.configs.base import ArchConfig
+    from repro.engine import SessionConfig
+    cfg = ArchConfig(name="g", family="gnn", gnn_hidden=8, gnn_layers=1,
+                     n_species=64, head_hidden=8, head_layers=2,
+                     remat=False, compute_dtype=jnp.float32)
+    return SessionConfig(model="gfm-mtl", arch=cfg, steps=3, batch_per_task=3,
+                         verbose=False, **kw)
+
+
+def test_session_resume_reproduces_uninterrupted_stream(tmp_path):
+    """The acceptance-criteria round trip: a Session that checkpoints after
+    run() and a fresh Session that restores the sidecar draw the same
+    continuation stream as one uninterrupted Session — with mixing AND
+    bucketing on, prefetch on (default)."""
+    from repro.data.mixing import MixingConfig
+    from repro.engine import Session
+    sources = source_dicts(generate_mixture(36, max_atoms=16, max_edges=64,
+                                            seed=0))
+    ck = str(tmp_path / "run")
+    cfg = _session_cfg(mixing=MixingConfig(temperature=2.0), bucketing=3)
+
+    # uninterrupted: run, then keep drawing from the live pipeline
+    with Session.from_config(cfg, sources=sources) as s:
+        s.run()
+        ref = [s._prefetcher.next_batch() for _ in range(5)]
+
+    # interrupted: identical run that saves a checkpoint, then a FRESH
+    # session restores the sidecar and continues
+    with Session.from_config(cfg.replace(ckpt_path=ck), sources=sources) as s:
+        s.run()
+    assert os.path.exists(ck + ".datapipe.json")
+    with Session.from_config(cfg, sources=sources) as s2:
+        s2.run()                      # same steps; advances its own pipeline
+        s2.restore_datapipe(ck)       # ...then rewinds to the snapshot
+        got = [s2._prefetcher.next_batch() for _ in range(5)]
+    _assert_streams_equal(ref, got)
+
+
+def test_session_datapipe_state_after_close_credits_only_consumed(tmp_path):
+    """Regression: after close() the underlying batcher sits PAST what the
+    loop consumed (discarded read-ahead); datapipe_state() must return the
+    snapshot taken at close time, and a resume from it must match an
+    uninterrupted stream."""
+    from repro.engine import Session
+    sources = source_dicts(generate_mixture(24, max_atoms=12, max_edges=48,
+                                            seed=0))
+    cfg = _session_cfg()
+    with Session.from_config(cfg, sources=sources) as s:
+        s.run()
+    post_close = s.datapipe_state()          # taken AFTER the with-block
+    assert post_close is not None
+
+    # uninterrupted twin: same run, stream read live (no close)
+    s2 = Session.from_config(cfg, sources=sources)
+    s2.run()
+    ref = [s2._prefetcher.next_batch() for _ in range(4)]
+    s2.close()
+
+    s3 = Session.from_config(cfg, sources=sources)
+    s3.run()
+    s3.restore_datapipe(post_close)
+    got = [s3._prefetcher.next_batch() for _ in range(4)]
+    s3.close()
+    _assert_streams_equal(ref, got)
+
+
+def test_session_datapipe_state_none_for_untrackable_batcher():
+    from repro.engine import Session
+
+    class Plain:
+        def next_batch(self):
+            b = GroupBatcher(
+                source_dicts(generate_mixture(10, max_atoms=12, max_edges=48,
+                                              seed=0)), 2).next_batch()
+            return b
+
+    sources = source_dicts(generate_mixture(10, max_atoms=12, max_edges=48,
+                                            seed=0))
+    with Session(_session_cfg(prefetch=False), sources=sources,
+                 batcher=GroupBatcher(sources, 2)) as s:
+        assert s.datapipe_state() is not None
+    with Session(_session_cfg(prefetch=False), sources=sources,
+                 batcher=Plain()) as s:
+        assert s.datapipe_state() is None

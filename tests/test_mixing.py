@@ -1,0 +1,226 @@
+"""Multi-source mixing (repro.data.mixing): weight math, deterministic
+error-diffusion schedule, epoch semantics, and Session wiring."""
+import numpy as np
+import pytest
+
+from repro.data.mixing import MixingBatcher, MixingConfig, mix_weights
+
+
+def _sources(sizes, feature_offset=1000):
+    """Source s has samples whose value encodes (s, sample index)."""
+    return [{"x": (feature_offset * s + np.arange(n)).astype(np.int64),
+             "y": np.full((n, 2), s, np.int64)} for s, n in enumerate(sizes)]
+
+
+# ---------------------------------------------------------------------------
+# mix_weights
+# ---------------------------------------------------------------------------
+
+def test_weights_proportional_uniform_and_flattened():
+    np.testing.assert_allclose(mix_weights([100, 400]), [0.2, 0.8])
+    np.testing.assert_allclose(mix_weights([100, 400], temperature=1e12),
+                               [0.5, 0.5], atol=1e-6)
+    w = mix_weights([100, 400], temperature=2.0)   # sqrt flattening
+    assert 0.2 < w[0] < 0.5 and w[1] == pytest.approx(1 - w[0])
+    np.testing.assert_allclose(mix_weights([10, 10], weights=(3, 1)),
+                               [0.75, 0.25])      # explicit weights win
+
+
+def test_weights_validation():
+    with pytest.raises(AssertionError):
+        mix_weights([100, 400], temperature=0.0)
+    with pytest.raises(AssertionError):
+        mix_weights([10, 10], weights=(1, -1))
+
+
+# ---------------------------------------------------------------------------
+# MixingBatcher
+# ---------------------------------------------------------------------------
+
+def test_schedule_tracks_weights_exactly():
+    """Error diffusion: realized per-source counts track k*B*w_s to within
+    the number of sources — not just in expectation."""
+    sizes = [97, 31, 9]
+    mb = MixingBatcher(_sources(sizes), 16,
+                       mixing=MixingConfig(emit_source=True), seed=0)
+    counts = np.zeros(3)
+    for k in range(1, 40):
+        counts += np.bincount(mb.next_batch()["source_id"], minlength=3)
+        assert np.abs(counts - k * 16 * mb.weights).max() <= len(sizes), \
+            f"schedule drifted at batch {k}"
+
+
+def test_extreme_weights_never_crash_the_schedule():
+    """Regression: the old error-diffusion top-up could drive a source's
+    credit negative and emit a negative count (np.full(-1, ...) crash).
+    Smooth weighted round-robin keeps every count >= 0 by construction."""
+    mb = MixingBatcher(_sources([50, 5, 5, 5, 5]), 1,
+                       mixing=MixingConfig(weights=(100, 1, 1, 1, 1),
+                                           emit_source=True), seed=0)
+    counts = np.zeros(5)
+    for _ in range(300):
+        b = mb.next_batch()
+        assert b["x"].shape == (1,)
+        counts += np.bincount(b["source_id"], minlength=5)
+    emp = counts / counts.sum()
+    assert np.abs(emp - mb.weights).max() < 0.02, (emp, mb.weights)
+
+
+def test_state_is_small_and_never_serializes_permutations():
+    """Checkpoint state is O(n_sources): the prefetch producer snapshots it
+    per batch, so it must not carry the per-source permutations."""
+    import json
+    mb = MixingBatcher(_sources([50_000, 30_000]), 8, seed=0)
+    mb.next_batch()
+    assert len(json.dumps(mb.state())) < 4096
+    from repro.data.loader import GroupBatcher
+    gb = GroupBatcher(_sources([50_000, 30_000]), 8, seed=0)
+    gb.next_batch()
+    assert len(json.dumps(gb.state())) < 4096
+
+
+def test_restore_rejects_source_count_mismatch():
+    mb = MixingBatcher(_sources([10, 10, 10]), 4, seed=0)
+    snap = mb.state()
+    with pytest.raises(AssertionError, match="sources"):
+        MixingBatcher(_sources([10, 10]), 4, seed=0).restore(snap)
+
+
+def test_samples_match_their_source_and_batch_is_flat():
+    mb = MixingBatcher(_sources([20, 30]), 8,
+                       mixing=MixingConfig(emit_source=True), seed=1)
+    for _ in range(10):
+        b = mb.next_batch()
+        assert b["x"].shape == (8,) and b["y"].shape == (8, 2)
+        # the value encoding proves each sample came from its claimed source
+        np.testing.assert_array_equal(b["x"] // 1000, b["source_id"])
+        np.testing.assert_array_equal(b["y"][:, 0], b["source_id"])
+
+
+def test_deterministic_under_seed_and_seed_matters():
+    a = MixingBatcher(_sources([20, 30]), 8, seed=5)
+    b = MixingBatcher(_sources([20, 30]), 8, seed=5)
+    for _ in range(6):
+        np.testing.assert_array_equal(a.next_batch()["x"],
+                                      b.next_batch()["x"])
+    c = MixingBatcher(_sources([20, 30]), 8, seed=6)
+    stream_a = np.concatenate([a.next_batch()["x"] for _ in range(4)])
+    stream_c = np.concatenate([c.next_batch()["x"] for _ in range(4)])
+    assert not np.array_equal(stream_a, stream_c)
+
+
+def test_per_source_epoch_semantics():
+    """Within one source, every sample is visited once per local epoch
+    (shuffled-cyclic, like GroupBatcher) under proportional mixing."""
+    n = 12
+    mb = MixingBatcher(_sources([n]), 4, seed=2)
+    stream = np.concatenate([mb.next_batch()["x"] for _ in range(3 * n // 4)])
+    epochs = stream.reshape(3, n)
+    for e in range(3):
+        assert sorted(epochs[e]) == list(range(n)), f"epoch {e}"
+    assert not np.array_equal(epochs[0], epochs[1]), "no reshuffle"
+
+
+def test_task_major_emits_leading_unit_dim():
+    mb = MixingBatcher(_sources([20, 30]), 8, seed=0, task_major=True)
+    b = mb.next_batch()
+    assert b["x"].shape == (1, 8) and b["y"].shape == (1, 8, 2)
+
+
+def test_state_restore_resumes_byte_identical():
+    mb = MixingBatcher(_sources([17, 5, 23]), 8, seed=9)
+    for _ in range(7):
+        mb.next_batch()
+    snap = mb.state()
+    ref = [mb.next_batch() for _ in range(9)]
+    fresh = MixingBatcher(_sources([17, 5, 23]), 8, seed=0)  # wrong seed
+    fresh.restore(snap)                                      # ...rewound
+    for a in ref:
+        b = fresh.next_batch()
+        for k in a:
+            np.testing.assert_array_equal(a[k], b[k])
+
+
+def test_gather_style_sources(tmp_path):
+    """MixingBatcher accepts ShardedSource readers (gather contract)."""
+    from repro.data.store import ShardedSource, write_store
+    paths = []
+    for s, n in enumerate([40, 20]):
+        p = str(tmp_path / f"s{s}")
+        write_store(p, {"x": 1000 * s + np.arange(n)}, shard_size=16)
+        paths.append(p)
+    mb = MixingBatcher([ShardedSource(p) for p in paths], 8,
+                       mixing=MixingConfig(emit_source=True), seed=0)
+    for _ in range(5):
+        b = mb.next_batch()
+        np.testing.assert_array_equal(b["x"] // 1000, b["source_id"])
+
+
+# ---------------------------------------------------------------------------
+# Session wiring
+# ---------------------------------------------------------------------------
+
+def _gnn_setup(n=40):
+    import jax.numpy as jnp
+    from repro.configs.base import ArchConfig
+    from repro.data.synthetic_atoms import generate_mixture, source_dicts
+    cfg = ArchConfig(name="g", family="gnn", gnn_hidden=8, gnn_layers=1,
+                     n_species=64, head_hidden=8, head_layers=2,
+                     remat=False, compute_dtype=jnp.float32)
+    return cfg, source_dicts(generate_mixture(n, max_atoms=12, max_edges=48))
+
+
+def test_session_multitask_mixing_becomes_task_weights():
+    from repro.engine import Session, SessionConfig
+    cfg, sources = _gnn_setup()
+    with Session.from_config(
+            SessionConfig(model="gfm-mtl", arch=cfg, steps=1,
+                          batch_per_task=2, verbose=False,
+                          mixing=MixingConfig(temperature=2.0)),
+            sources=sources) as s:
+        sizes = [len(src["energy"]) for src in sources]
+        np.testing.assert_allclose(
+            s.task_weights, mix_weights(sizes, temperature=2.0), rtol=1e-6)
+        s.run()
+
+
+def test_session_baseline_over_mixture():
+    """gfm-baseline (ONE branch) + cfg.mixing trains on the weighted
+    mixture of all five sources — the paper's GFM-Baseline-All setup."""
+    from repro.engine import Session, SessionConfig
+    cfg, sources = _gnn_setup()
+    with Session.from_config(
+            SessionConfig(model="gfm-baseline", arch=cfg, steps=2,
+                          batch_per_task=4, verbose=False, mixing=1.0),
+            sources=sources) as s:
+        res = s.run()
+        assert np.isfinite(res.final_loss)
+        # one branch: head leaves carry a leading task dim of 1
+        heads = res.params["heads"]
+        import jax
+        assert all(x.shape[0] == 1 for x in jax.tree_util.tree_leaves(heads))
+
+
+def test_session_baseline_many_sources_without_mixing_raises():
+    from repro.engine import Session, SessionConfig
+    cfg, sources = _gnn_setup()
+    with pytest.raises(AssertionError, match="mixing"):
+        Session.from_config(
+            SessionConfig(model="gfm-baseline", arch=cfg, steps=1,
+                          verbose=False), sources=sources)
+
+
+def test_session_mixing_shorthands():
+    from repro.engine.session import _as_bucket_spec, _as_mixing
+    assert _as_mixing(None) is None
+    assert _as_mixing(2.0).temperature == 2.0
+    assert _as_mixing((1, 3)).weights == (1, 3)
+    mc = MixingConfig(temperature=3.0)
+    assert _as_mixing(mc) is mc
+    with pytest.raises(TypeError):
+        _as_mixing("proportional")
+    # bool IS int in Python — a likely typo (prefetch-style flag), rejected
+    with pytest.raises(TypeError, match="ambiguous"):
+        _as_mixing(True)
+    with pytest.raises(TypeError, match="ambiguous"):
+        _as_bucket_spec(True, None, None)

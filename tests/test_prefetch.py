@@ -71,6 +71,74 @@ def test_close_is_idempotent_and_next_batch_after_close_raises():
         pf.next_batch()
 
 
+def test_exception_inside_transform_propagates():
+    """transform runs on the producer thread; its exceptions must surface
+    from next_batch() like batcher exceptions do."""
+    calls = {"n": 0}
+
+    def bad_transform(b):
+        calls["n"] += 1
+        if calls["n"] > 1:
+            raise ValueError("transform boom")
+        return b
+
+    pf = Prefetcher(SingleBatcher({"x": np.arange(8)}, 2, seed=0),
+                    transform=bad_transform, depth=1)
+    try:
+        with pytest.raises(ValueError, match="transform boom"):
+            for _ in range(10):
+                pf.next_batch()
+    finally:
+        pf.close()
+
+
+def _tiny_session(**kw):
+    import jax.numpy as jnp
+    from repro.configs.base import ArchConfig
+    from repro.data.synthetic_atoms import generate_all
+    from repro.engine import Session, SessionConfig
+
+    cfg = ArchConfig(name="g", family="gnn", gnn_hidden=8, gnn_layers=1,
+                     n_species=64, head_hidden=8, head_layers=2,
+                     remat=False, compute_dtype=jnp.float32)
+    data = generate_all(8, max_atoms=8, max_edges=24, sources=["ani1x"])
+    s = data["ani1x"]
+    sources = [dict(species=s.species, pos=s.pos, edge_src=s.edge_src,
+                    edge_dst=s.edge_dst, node_mask=s.node_mask,
+                    edge_mask=s.edge_mask, energy=s.energy, forces=s.forces)]
+    return Session.from_config(
+        SessionConfig(model="gfm-mtl", arch=cfg, steps=2, batch_per_task=2,
+                      verbose=False, **kw), sources=sources)
+
+
+def test_session_close_stops_producer_thread():
+    s = _tiny_session()
+    s.run()
+    thread = s._prefetcher._thread
+    assert thread.is_alive(), "prefetcher should be live after run()"
+    s.close()
+    assert not thread.is_alive(), "close() must stop the producer thread"
+    assert s._prefetcher is None
+    s.close()                         # idempotent
+    s.run()                           # session stays usable: new prefetcher
+    assert s._prefetcher._thread.is_alive()
+    s.close()
+
+
+def test_session_context_manager_shuts_down():
+    with _tiny_session() as s:
+        s.run()
+        thread = s._prefetcher._thread
+        assert thread.is_alive()
+    assert not thread.is_alive(), "__exit__ must stop the producer"
+
+
+def test_session_prefetch_off_never_starts_a_thread():
+    with _tiny_session(prefetch=False) as s:
+        s.run()
+        assert s._prefetcher is None
+
+
 def test_session_prefetch_on_off_same_trajectory():
     """End to end: SessionConfig.prefetch only changes scheduling, so the
     loss trajectory is identical with it on or off."""
