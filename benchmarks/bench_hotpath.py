@@ -47,11 +47,15 @@ REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 FULL = dict(agg=dict(B=4, E=768, A=128, F=256, iters=20),
             egnn=dict(B=4, E=768, A=128, hidden=256, layers=2, iters=5),
             train=dict(B=4, E=768, A=128, hidden=256, layers=2, iters=3),
+            block_h=dict(B=4, E=768, A=128, hidden=866,
+                         block_hs=(32, 64, 128), iters=1),
             prefetch=dict(A=128, E=768, hidden=16, T=2, B=8, layers=1,
                           n_samples=64, steps=24, warmup=3))
 SMOKE = dict(agg=dict(B=2, E=96, A=16, F=32, iters=3),
              egnn=dict(B=2, E=96, A=16, hidden=32, layers=2, iters=2),
              train=dict(B=2, E=96, A=16, hidden=32, layers=2, iters=2),
+             block_h=dict(B=2, E=96, A=16, hidden=32,
+                          block_hs=(8, 16, 32), iters=2),
              prefetch=dict(A=16, E=64, hidden=16, T=2, B=2, layers=1,
                            n_samples=16, steps=4, warmup=1))
 
@@ -129,6 +133,50 @@ def bench_egnn_train_step(B, E, A, hidden, layers, iters):
     return {"shape": dict(B=B, E=E, A=A, hidden=hidden, layers=layers),
             "us_per_step": us,
             "fused_vs_scatter": us["scatter"] / us["fused"]}
+
+
+def bench_block_h_sweep(B, E, A, hidden, block_hs, iters):
+    """ISSUE-5 measurement: the fused kernels' H-block grid split at the
+    paper width. For each ``block_h``, time the fused FORWARD and the fused
+    FWD+BWD (``jax.value_and_grad`` through ``egnn_edge_agg`` — the smoke
+    path that proves the fused backward kernel runs under every H split),
+    against the planned-blocks baseline from the VMEM budget model.
+    Interpreter mode off-TPU: correctness/coverage artifacts, not kernel
+    timings (the split's point is VMEM residency on real hardware)."""
+    from repro.kernels.egnn_edge import ops as edge_ops
+    from repro.kernels.egnn_edge.budget import (VMEM_BUDGET, plan_blocks,
+                                                vmem_bytes)
+    from repro.models.mlp import mlp_init
+    ks = jax.random.split(jax.random.PRNGKey(0), 7)
+    h = jax.random.normal(ks[0], (B, A, hidden), jnp.float32)
+    pos = jax.random.normal(ks[1], (B, A, 3), jnp.float32) * 2.0
+    src = jax.random.randint(ks[2], (B, E), 0, A)
+    dst = jax.random.randint(ks[3], (B, E), 0, A + 1)   # incl. pad sentinel
+    em = jax.random.bernoulli(ks[4], 0.85, (B, E)) & (dst < A)
+    phi_e = mlp_init(ks[5], 2 * hidden + 1, hidden, hidden, 1, jnp.float32)
+    gw = jax.random.normal(ks[6], (B, A, hidden), jnp.float32)
+    be, bh_planned = plan_blocks(A, E, hidden)
+
+    def fwd(hh, block_h):
+        return edge_ops.egnn_edge_agg(hh, pos, src, dst, em, phi_e,
+                                      block_e=be, block_h=block_h)
+
+    sweep = {}
+    for bh in block_hs:
+        f = jax.jit(functools.partial(fwd, block_h=bh))
+        g = jax.jit(jax.value_and_grad(
+            lambda hh, bh=bh: jnp.sum(fwd(hh, bh) * gw)))
+        sweep[str(bh)] = {
+            "us_fwd": _time(f, h, iters=iters, warmup=1) * 1e6,
+            "us_fwd_bwd": _time(g, h, iters=iters, warmup=1) * 1e6,
+            "vmem_mib": vmem_bytes(A, be, bh, hidden) / 2 ** 20,
+        }
+    return {"shape": dict(B=B, E=E, A=A, hidden=hidden, block_e=be),
+            "planned": dict(block_e=be, block_h=bh_planned,
+                            vmem_mib=vmem_bytes(A, be, bh_planned,
+                                                hidden) / 2 ** 20,
+                            budget_mib=VMEM_BUDGET / 2 ** 20),
+            "us_per_call": sweep}
 
 
 # ---------------------------------------------------------------------------
@@ -228,7 +276,7 @@ def bench_prefetch(A, E, hidden, T, B, layers, n_samples, steps, warmup):
 def validate(result: dict):
     """Smoke contract: the emitted JSON is complete and self-consistent."""
     for section in ("segment_sum", "egnn_forward", "egnn_train_step",
-                    "prefetch"):
+                    "egnn_block_h", "prefetch"):
         assert section in result, section
     for impl in ("jnp", "scatter", "pallas"):
         assert result["segment_sum"]["us_per_call"][impl] > 0, impl
@@ -236,6 +284,14 @@ def validate(result: dict):
         assert result["egnn_forward"]["us_per_call"][impl] > 0, impl
     for impl in ("scatter", "fused"):
         assert result["egnn_train_step"]["us_per_step"][impl] > 0, impl
+    # the block_h sweep must have exercised the fused BACKWARD kernel at
+    # every H split, within the planned VMEM budget (the bench-smoke job's
+    # coverage of the H-blocked path)
+    bhs = result["egnn_block_h"]
+    assert len(bhs["us_per_call"]) >= 2, "block_h sweep needs >= 2 splits"
+    for bh, row in bhs["us_per_call"].items():
+        assert row["us_fwd"] > 0 and row["us_fwd_bwd"] > 0, bh
+    assert bhs["planned"]["vmem_mib"] <= bhs["planned"]["budget_mib"]
     assert result["segment_sum"]["speedup_scatter_vs_onehot"] > 0
     assert result["prefetch"]["step_ms"]["prefetch_on"] > 0
     assert result["prefetch"]["speedup_prefetch_on_vs_off"] > 0
@@ -264,6 +320,7 @@ def main(argv=None):
         "segment_sum": bench_segment_sum(**shapes["agg"]),
         "egnn_forward": bench_egnn_forward(**shapes["egnn"]),
         "egnn_train_step": bench_egnn_train_step(**shapes["train"]),
+        "egnn_block_h": bench_block_h_sweep(**shapes["block_h"]),
         "prefetch": bench_prefetch(**shapes["prefetch"]),
     }
     validate(result)
@@ -281,6 +338,11 @@ def main(argv=None):
     for impl, us in ts["us_per_step"].items():
         print(f"hotpath_egnn_train/{impl},{us:.0f},"
               f"fwd+bwd;hidden={ts['shape']['hidden']}")
+    bh = result["egnn_block_h"]
+    for split, row in bh["us_per_call"].items():
+        print(f"hotpath_egnn_block_h/{split},{row['us_fwd_bwd']:.0f},"
+              f"fwd+bwd;hidden={bh['shape']['hidden']};"
+              f"vmem={row['vmem_mib']:.1f}MiB")
     pf = result["prefetch"]
     print(f"hotpath_prefetch,{pf['step_ms']['prefetch_on'] * 1e3:.0f},"
           f"off={pf['step_ms']['prefetch_off']:.1f}ms;"

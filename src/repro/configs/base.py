@@ -87,9 +87,16 @@ class ArchConfig:
     segment_sum_impl: str = "scatter"
     # Pallas block-size override shared by the segment-sum kernel and the
     # fused egnn_edge kernel, forward AND backward (0 = autotune from the
-    # problem shape via repro.kernels.segment_sum.kernel.autotune_blocks):
+    # problem shape: repro.kernels.segment_sum.kernel.autotune_blocks for
+    # the segment-sum kernel, the VMEM budget planner
+    # repro.kernels.egnn_edge.budget.plan_blocks for the fused kernel —
+    # over-budget explicit overrides raise there instead of compiling):
     kernel_block_n: int = 0        # node-tile rows
     kernel_block_e: int = 0        # edge-tile rows
+    # fused-kernel H-block: tiles the φ_e inner hidden axis so VMEM
+    # residency is bounded by block_h·H, not H² — the paper-width (H=866)
+    # enabler (0 = plan from the budget model; egnn_edge only)
+    kernel_block_h: int = 0
     # precision / memory ---------------------------------------------------
     param_dtype: Any = jnp.float32
     compute_dtype: Any = jnp.bfloat16

@@ -8,7 +8,14 @@ it recomputes the edge-major residuals tile-by-tile from the saved INPUTS
 without materializing the (B, E, 2H+1) concat or the (B, E, H) message
 tensor in HBM — so ``impl="fused"`` trains with the same memory profile it
 infers with. The pure-jnp reference (``ref.py``) remains the parity oracle
-for both directions (tests/test_hotpath.py).
+for both directions (tests/test_hotpath.py, tests/test_egnn_paper_shape.py).
+
+Block planning: every call resolves ``(block_e, block_h)`` against the
+itemized VMEM budget model in ``budget.py`` — ``None`` means "plan it"
+(``plan_blocks`` never emits an over-budget config, which is what lets the
+fused path run at the paper width H=866), and explicit overrides are
+validated (``VmemBudgetError`` instead of silently compiling a config that
+cannot fit a TPU core's VMEM).
 """
 from __future__ import annotations
 
@@ -17,8 +24,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.segment_sum.kernel import autotune_blocks
-
+from .budget import check_blocks, plan_blocks
 from .kernel import egnn_edge_fused, egnn_edge_fused_bwd
 
 
@@ -34,27 +40,25 @@ def _split_phi_e(phi_e, H, cd):
             phi_e["fc1"]["b"].astype(cd)[None, :])
 
 
-def _resolve_block_e(block_e, A, E, H):
-    """autotune-or-override: 0/None -> the shared segment-sum heuristic.
-    The chosen block_e is pinned into the custom_vjp static for BOTH
-    directions, so the budget models the larger (backward) resident set:
-    h + g + acc_dh node tiles (3·A·H), three (H,H) weight tiles
-    (w0i/w0j/w1) plus three (H,H) f32 weight-grad scratches, the (1,H)
-    rows, and ~4 live (be,H) f32 edge intermediates beyond the one message
-    tile autotune_blocks already counts (folded in by tripling its be·F
-    term via vmem_limit headroom)."""
-    if block_e:
-        return block_e
-    extra = 4 * (3 * A * H + 6 * H * H + 8 * H)
-    # hand autotune a reduced budget so its single be·F message-tile term
-    # stands in for the backward's several concurrent (be,H) intermediates
-    return autotune_blocks(A, E, H, extra_bytes=extra,
-                           vmem_limit=4 << 20)[1]
+def _resolve_blocks(block_e, block_h, A, E, H):
+    """Plan-or-validate ``(block_e, block_h)`` against the VMEM budget
+    model. The resolved pair is pinned into the custom_vjp static for BOTH
+    directions, so the model's worst-direction (backward) resident set is
+    what gets budgeted (``budget.vmem_bytes``). Explicit overrides that
+    exceed the budget raise ``VmemBudgetError`` — never silently compile."""
+    if block_e and block_h:
+        check_blocks(A, E, H, block_e, block_h)
+        return block_e, block_h
+    pe, ph = plan_blocks(A, E, H)
+    be, bh = block_e or pe, block_h or ph
+    if block_e or block_h:          # one side overridden: re-validate the mix
+        check_blocks(A, E, H, be, bh)
+    return be, bh
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
 def _edge_agg(static, h, pos, src, dst, edge_mask, phi_e):
-    compute_dtype, block_e, interpret = static
+    compute_dtype, block_e, block_h, interpret = static
     cd = compute_dtype or h.dtype
     H = h.shape[-1]
     A = h.shape[1]
@@ -64,7 +68,8 @@ def _edge_agg(static, h, pos, src, dst, edge_mask, phi_e):
     dr = jnp.where(edge_mask, dst, A)
     return egnn_edge_fused(h.astype(cd), pos, sr, dr,
                            w0i, w0j, w0d, b0, w1, b1,
-                           block_e=block_e, interpret=interpret)
+                           block_e=block_e, block_h=block_h,
+                           interpret=interpret)
 
 
 def _edge_agg_fwd(static, h, pos, src, dst, edge_mask, phi_e):
@@ -75,7 +80,7 @@ def _edge_agg_fwd(static, h, pos, src, dst, edge_mask, phi_e):
 
 
 def _edge_agg_bwd(static, res, g):
-    compute_dtype, block_e, interpret = static
+    compute_dtype, block_e, block_h, interpret = static
     h, pos, src, dst, edge_mask, phi_e = res
     cd = compute_dtype or h.dtype
     H = h.shape[-1]
@@ -85,7 +90,7 @@ def _edge_agg_bwd(static, res, g):
     dr = jnp.where(edge_mask, dst, A)
     dh, dpos, dw0i, dw0j, dw0d, db0, dw1, db1 = egnn_edge_fused_bwd(
         g, h.astype(cd), pos, sr, dr, w0i, w0j, w0d, b0, w1,
-        block_e=block_e, interpret=interpret)
+        block_e=block_e, block_h=block_h, interpret=interpret)
     f0, f1 = phi_e["fc0"], phi_e["fc1"]
     dphi = {
         "fc0": {"w": jnp.concatenate([dw0i, dw0j, dw0d],
@@ -101,13 +106,16 @@ _edge_agg.defvjp(_edge_agg_fwd, _edge_agg_bwd)
 
 
 def egnn_edge_agg(h, pos, src, dst, edge_mask, phi_e, *, compute_dtype=None,
-                  block_e=None, interpret=None):
+                  block_e=None, block_h=None, interpret=None):
     """Fused EGNN message + aggregation: (B, A, H) node features in,
     (B, A, H) aggregated messages out. Drop-in for the unfused
     gather/φ_e/segment-sum sequence in ``egnn_apply`` (numerics: ``ref.py``),
     differentiable end-to-end via the fused backward kernel.
-    ``block_e=None`` autotunes (``cfg.kernel_block_e`` overrides via
-    ``egnn_apply``); ``interpret=None`` auto-detects the backend."""
-    block_e = _resolve_block_e(block_e, h.shape[1], src.shape[1], h.shape[-1])
-    static = (compute_dtype, block_e, interpret)
+    ``block_e``/``block_h``: None plans against the VMEM budget model
+    (``cfg.kernel_block_e`` / ``cfg.kernel_block_h`` override via
+    ``egnn_apply``; over-budget overrides raise ``budget.VmemBudgetError``);
+    ``interpret=None`` auto-detects the backend."""
+    block_e, block_h = _resolve_blocks(block_e, block_h, h.shape[1],
+                                       src.shape[1], h.shape[-1])
+    static = (compute_dtype, block_e, block_h, interpret)
     return _edge_agg(static, h, pos, src, dst, edge_mask, phi_e)

@@ -101,8 +101,17 @@ def autotune_blocks(n_nodes: int, E: int, F: int, *, extra_bytes: int = 0,
     (``repro.configs.base.ArchConfig``)."""
     bn = max(8, min(128, n_nodes))
     be = max(8, min(256, E))
-    while be > 8 and extra_bytes + 4 * (bn * F + be * F + be * bn) > vmem_limit:
+
+    def resident():
+        return extra_bytes + 4 * (bn * F + be * F + be * bn)
+
+    while be > 8 and resident() > vmem_limit:
         be //= 2
+    # never emit an over-budget config: once the edge tile hits the sublane
+    # floor, keep shrinking the node tile (wide-F problems otherwise sail
+    # past the budget with be pinned at 8)
+    while bn > 8 and resident() > vmem_limit:
+        bn //= 2
     return bn, be
 
 

@@ -93,9 +93,11 @@ def egnn_apply(params: Params, batch: dict, *, cfg, impl=None) -> jnp.ndarray:
                          f"known: {SEGMENT_SUM_IMPLS}")
     cd = cfg.compute_dtype
     # kernel tile override shared by the pallas + fused paths (0/absent =
-    # autotune inside the kernel wrappers)
+    # autotune inside the kernel wrappers); block_h additionally tiles the
+    # fused kernel's φ_e hidden axis (the H=866 VMEM enabler)
     bn = getattr(cfg, "kernel_block_n", 0) or None
     be = getattr(cfg, "kernel_block_e", 0) or None
+    bh = getattr(cfg, "kernel_block_h", 0) or None
     species = batch["species"]
     pos = batch["pos"].astype(jnp.float32)
     src, dst = batch["edge_src"], batch["edge_dst"]
@@ -111,7 +113,8 @@ def egnn_apply(params: Params, batch: dict, *, cfg, impl=None) -> jnp.ndarray:
         if impl == "fused":
             from repro.kernels.egnn_edge import ops as edge_ops
             agg = edge_ops.egnn_edge_agg(h, pos, src, dst, em, lp["phi_e"],
-                                         compute_dtype=cd, block_e=be)
+                                         compute_dtype=cd, block_e=be,
+                                         block_h=bh)
         else:
             hi = gather(h, jnp.minimum(src, A - 1))
             hj = gather(h, jnp.minimum(dst, A - 1))

@@ -1,0 +1,197 @@
+"""Paper-shape parity suite for the H-blocked fused EGNN kernels.
+
+The paper's HydraGNN trunk runs hidden width H=866; the fused egnn_edge
+forward/backward kernels only fit that width because a ``block_h`` grid
+dimension bounds VMEM residency by ``block_h·H`` (see
+``repro.kernels.egnn_edge.budget``). This file is what makes the
+paper-shape claim honest: fwd + grad parity against the pure-jnp reference
+at the TRUE paper shape (B=4, E=768, A=128, H=866), fp32 at 1e-5 and bf16
+relaxed, with masked AND sentinel-padded edges, plus ragged
+``E % block_e != 0`` / ``H % block_h != 0`` tiling.
+
+The H=866 tests carry the ``paper_shape`` marker (registered in pytest.ini,
+deselected from the default run so tier-1 stays quick; the non-gating CI
+``paper-shape`` job runs ``pytest -m paper_shape``). A small-H variant of
+the same checks runs un-marked on every tier-1 pass.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.kernels.egnn_edge import ops as edge_ops
+from repro.kernels.egnn_edge.budget import VMEM_BUDGET, plan_blocks, vmem_bytes
+from repro.kernels.egnn_edge.ref import egnn_edge_agg_ref
+from repro.models import gnn
+from repro.models.mlp import mlp_init
+
+PAPER = dict(B=4, E=768, A=128, H=866)     # the HydraGNN GFM trunk shape
+
+
+def _case(B, E, A, H, dtype=jnp.float32, seed=0):
+    """Kernel inputs with masked AND sentinel-padded (dst == A) edges plus
+    a fixed cotangent probe for grad parity."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 7)
+    h = jax.random.normal(ks[0], (B, A, H), dtype)
+    pos = jax.random.normal(ks[1], (B, A, 3), jnp.float32) * 2.0
+    src = jax.random.randint(ks[2], (B, E), 0, A)
+    dst = jax.random.randint(ks[3], (B, E), 0, A + 1)      # A = pad sentinel
+    em = jax.random.bernoulli(ks[4], 0.85, (B, E)) & (dst < A)
+    phi_e = mlp_init(ks[5], 2 * H + 1, H, H, 1, jnp.float32)
+    gw = jax.random.normal(ks[6], (B, A, H), jnp.float32)  # cotangent probe
+    return h, pos, src, dst, em, phi_e, gw
+
+
+def _assert_close_scaled(got, ref, tol, name=""):
+    got = np.asarray(got, np.float32)
+    ref = np.asarray(ref, np.float32)
+    scale = max(1.0, float(np.abs(ref).max()))
+    np.testing.assert_allclose(got, ref, atol=tol * scale, rtol=tol,
+                               err_msg=name)
+
+
+def _check_fwd_and_grads(B, E, A, H, dtype, tol, *, block_e=None,
+                         block_h=None, seed=0):
+    """Shared harness: fused fwd + all cotangents vs the jnp oracle."""
+    h, pos, src, dst, em, phi_e, gw = _case(B, E, A, H, dtype, seed)
+    kw = dict(compute_dtype=dtype, block_e=block_e, block_h=block_h)
+
+    out = edge_ops.egnn_edge_agg(h, pos, src, dst, em, phi_e, **kw)
+    ref = egnn_edge_agg_ref(h, pos, src, dst, em, phi_e, compute_dtype=dtype)
+    assert out.dtype == ref.dtype
+    _assert_close_scaled(out, ref, tol, "forward")
+
+    def loss(fn, hh, pp, ww, **lkw):
+        o = fn(hh, pp, src, dst, em, ww, **lkw)
+        return jnp.sum(o.astype(jnp.float32) * gw)
+
+    g_fused = jax.grad(lambda *a: loss(edge_ops.egnn_edge_agg, *a, **kw),
+                       argnums=(0, 1, 2))(h, pos, phi_e)
+    g_ref = jax.grad(lambda *a: loss(egnn_edge_agg_ref, *a,
+                                     compute_dtype=dtype),
+                     argnums=(0, 1, 2))(h, pos, phi_e)
+    for name, a, b in zip(("d_h", "d_pos", "d_phi_e"), g_fused, g_ref):
+        jax.tree_util.tree_map(
+            lambda x, y, n=name: _assert_close_scaled(x, y, tol, n), a, b)
+        jax.tree_util.tree_map(
+            lambda x, y: (x.dtype == y.dtype) or pytest.fail(
+                f"cotangent dtype {x.dtype} != primal-grad {y.dtype}"), a, b)
+
+
+# ---------------------------------------------------------------------------
+# the true paper shape, H=866 (marked: non-gating CI job, not tier-1)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.paper_shape
+@pytest.mark.parametrize("dtype,tol", [
+    (jnp.float32, 1e-5),       # acceptance: fp32 atol ≲ 1e-5
+    (jnp.bfloat16, 4e-2),      # relaxed: bf16 forward-recompute rounding
+])
+def test_paper_width_fwd_and_grad_parity(dtype, tol):
+    """H=866 fwd + every cotangent vs the jnp reference, with the
+    (block_e, block_h) the VMEM budget model plans."""
+    _check_fwd_and_grads(**PAPER, dtype=dtype, tol=tol)
+
+
+@pytest.mark.paper_shape
+def test_paper_width_planned_blocks_within_budget():
+    """The blocks the H=866 run above actually used are provably within
+    the documented VMEM budget — an H-block smaller than H (the whole
+    point of the grid split)."""
+    A, E, H = PAPER["A"], PAPER["E"], PAPER["H"]
+    be, bh = plan_blocks(A, E, H)
+    assert bh < H, f"paper width must be H-split, planned block_h={bh}"
+    assert vmem_bytes(A, be, bh, H) <= VMEM_BUDGET
+
+
+@pytest.mark.paper_shape
+def test_paper_width_ragged_blocks():
+    """Explicit block sizes that divide NEITHER E (768 % 160 != 0) nor H
+    (866 % 100 != 0): the sentinel edge padding and the zero weight-column
+    padding must contribute exactly nothing."""
+    _check_fwd_and_grads(**PAPER, dtype=jnp.float32, tol=1e-5,
+                         block_e=160, block_h=100)
+
+
+@pytest.mark.paper_shape
+def test_paper_width_through_egnn_apply():
+    """The whole fused layer path at paper width through egnn_apply with
+    the config-driven kernel_block_h knob."""
+    cfg = ArchConfig(name="paper", family="gnn", gnn_hidden=PAPER["H"],
+                     gnn_layers=1, n_species=64, max_atoms=PAPER["A"],
+                     max_edges=PAPER["E"], remat=False,
+                     compute_dtype=jnp.float32, segment_sum_impl="fused",
+                     kernel_block_h=128)
+    h, pos, src, dst, em, phi_e, _ = _case(**PAPER)
+    batch = dict(species=jnp.ones((PAPER["B"], PAPER["A"]), jnp.int32),
+                 pos=pos, edge_src=src, edge_dst=dst,
+                 node_mask=jnp.ones((PAPER["B"], PAPER["A"]), bool),
+                 edge_mask=em)
+    params = gnn.egnn_init(jax.random.PRNGKey(0), cfg)
+    got = gnn.egnn_apply(params, batch, cfg=cfg)           # fused via cfg
+    ref = gnn.egnn_apply(params, batch, cfg=cfg, impl="jnp")
+    _assert_close_scaled(got, ref, 1e-5, "egnn_apply fused@H=866")
+
+
+# ---------------------------------------------------------------------------
+# small-H fast variant — identical checks, runs un-marked on every tier-1
+# pass (ragged E and H blocks, sentinel pads, fp32 + bf16)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype,tol", [
+    (jnp.float32, 1e-5),
+    (jnp.bfloat16, 4e-2),
+])
+def test_small_h_fwd_and_grad_parity_ragged_blocks(dtype, tol):
+    """The same harness at tier-1 speed: H=96 with block_h=40 (ragged),
+    E=100 with block_e=48 (ragged), masked + sentinel-padded edges."""
+    _check_fwd_and_grads(B=2, E=100, A=16, H=96, dtype=dtype, tol=tol,
+                         block_e=48, block_h=40)
+
+
+def test_small_h_block_h_invariance():
+    """block_h is a tiling knob, not a numeric one: every split of H gives
+    the same fwd output and the same d_h cotangent (fp32, tight tol)."""
+    h, pos, src, dst, em, phi_e, gw = _case(B=2, E=64, A=12, H=48)
+
+    def run(block_h):
+        def f(hh):
+            o = edge_ops.egnn_edge_agg(hh, pos, src, dst, em, phi_e,
+                                       block_h=block_h)
+            return jnp.sum(o * gw)
+        return jax.value_and_grad(f)(h)
+
+    v_ref, g_ref = run(48)                      # whole-H (single block)
+    for bh in (7, 16, 48, 64):                  # ragged, even, oversized
+        v, g = run(bh)
+        np.testing.assert_allclose(float(v), float(v_ref), rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(g), np.asarray(g_ref),
+                                   atol=1e-6, rtol=1e-6,
+                                   err_msg=f"block_h={bh}")
+
+
+def test_small_h_kernel_block_h_knob_threads_through():
+    """cfg.kernel_block_h reaches the fused kernels through egnn_apply —
+    forward and gradients — without changing numerics."""
+    cfg = ArchConfig(name="g", family="gnn", gnn_hidden=24, gnn_layers=2,
+                     n_species=64, head_hidden=12, head_layers=2,
+                     max_atoms=10, max_edges=40, remat=False,
+                     compute_dtype=jnp.float32)
+    from repro.data.synthetic_atoms import generate_all, to_batch_dict
+    data = generate_all(4, max_atoms=10, max_edges=40, sources=["ani1x"])
+    batch = to_batch_dict(data["ani1x"], np.arange(4))
+    params = gnn.egnn_init(jax.random.PRNGKey(1), cfg)
+    tuned = cfg.replace(kernel_block_h=8)
+    ref = gnn.egnn_apply(params, batch, cfg=cfg, impl="jnp")
+    got = gnn.egnn_apply(params, batch, cfg=tuned, impl="fused")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+    def loss(p, c):
+        return jnp.mean(gnn.egnn_apply(p, batch, cfg=c, impl="fused") ** 2)
+    g_t = jax.grad(lambda p: loss(p, tuned))(params)
+    g_d = jax.grad(lambda p: loss(p, cfg))(params)
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=1e-5, rtol=1e-4), g_t, g_d)
