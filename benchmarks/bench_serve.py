@@ -1,0 +1,341 @@
+"""Serving benchmarks -> BENCH_serve.json (repo root).
+
+Measures the ISSUE-6 ``repro.serve`` subsystem — continuous size-binned
+batching over the training bucket grid — against a naive per-request
+baseline on an open-loop, paper-proportioned request stream:
+
+  * baseline ``NaiveServer``: the SAME admission (bucket_for binning, same
+    padded bucket shapes, warm jit) but B=1 — one forward per request, no
+    coalescing. The only variable is continuous batching itself.
+  * load: seeded exponential inter-arrivals (open loop — arrivals do not
+    wait for completions) over ``generate_mixture``'s five sources, each
+    request asking the head of its source. Rates are calibrated to the
+    measured naive service rate mu: below saturation (0.5x), at the knee
+    (2x) and well past it (6x), so the JSON shows where coalescing starts
+    to matter and how far it carries.
+  * metrics per (server, rate): throughput (completed / wall) and e2e
+    latency p50/p95/p99 measured uniformly by the generator (future done
+    callbacks), plus the engine's own stage histograms and the compiled-
+    shape count vs the bucket-grid recompile budget.
+
+Run:  python benchmarks/bench_serve.py [--smoke] [--out PATH]
+
+``--smoke`` runs a tiny model + short streams and asserts the emitted JSON
+is well-formed — the CI serve-smoke job's entry point (see
+docs/benchmarks.md for the schema).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import threading
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+# CPU-sized serving rig: the paper-palette mixture (structures <= 32 atoms)
+# on a small trunk — this benchmarks the BATCHING, not the kernels. The
+# bucket grid quantizes the mixture's size spread; max_batch bounds how much
+# coalescing can win (ceiling ~ max_batch x when forwards are overhead-bound).
+FULL = dict(total=400, max_atoms=32, max_edges=320, hidden=32, layers=2,
+            head_hidden=16, max_batch=8, max_wait_ms=6.0,
+            n_requests=400, rate_factors=(0.5, 2.0, 6.0), calib=40)
+SMOKE = dict(total=60, max_atoms=16, max_edges=96, hidden=16, layers=1,
+             head_hidden=8, max_batch=8, max_wait_ms=2.0,
+             n_requests=90, rate_factors=(0.5, 2.0, 8.0), calib=15)
+
+
+def _build(p):
+    """(params, arch, spec, sources): one tiny trained-shape GFM + the
+    five-source request pool + the shared bucket grid."""
+    import jax.numpy as jnp
+    from repro.configs.base import ArchConfig
+    from repro.core.mtl import make_gfm_mtl
+    from repro.data.bucketing import BucketSpec
+    from repro.data.synthetic_atoms import generate_mixture, source_dicts
+    sources = source_dicts(generate_mixture(
+        p["total"], max_atoms=p["max_atoms"], max_edges=p["max_edges"],
+        seed=0))
+    arch = ArchConfig(name="bench-serve", family="gnn",
+                      gnn_hidden=p["hidden"], gnn_layers=p["layers"],
+                      n_species=64, head_hidden=p["head_hidden"],
+                      head_layers=2, remat=False,
+                      compute_dtype=jnp.float32)
+    model = make_gfm_mtl(arch, len(sources))
+    params = model.init(jax.random.PRNGKey(0))
+    # serving wants a COARSER grid than training: with per-(bucket, head)
+    # bins, every extra bucket multiplies the bin count (x n_heads) and
+    # starves coalescing — a 2x2 grid keeps pad waste modest while letting
+    # bins actually fill (see docs/serving.md, "grid granularity")
+    spec = BucketSpec.from_sources(sources, n_atom_buckets=2,
+                                   n_edge_buckets=2)
+    return params, arch, spec, sources
+
+
+def _request_pool(sources, n, seed):
+    """n (sample, head) pairs drawn paper-proportionally: source i appears
+    with probability |source_i| / total, each request asks its own head."""
+    rng = np.random.default_rng(seed)
+    sizes = np.array([s["species"].shape[0] for s in sources], float)
+    keys = ("species", "pos", "edge_src", "edge_dst", "node_mask",
+            "edge_mask")
+    pool = []
+    for t in rng.choice(len(sources), size=n, p=sizes / sizes.sum()):
+        i = rng.integers(sources[t]["species"].shape[0])
+        pool.append(({k: sources[t][k][i] for k in keys}, int(t)))
+    return pool
+
+
+# ---------------------------------------------------------------------------
+# the baseline: same admission, same shapes, no coalescing
+# ---------------------------------------------------------------------------
+
+class NaiveServer:
+    """Per-request serving: each request runs as its own B=1 padded forward
+    through a warm jit at its bucket shape. Shares ``RequestQueue`` and
+    ``assemble`` with the real engine so admission, padding and the compiled
+    shapes are identical — continuous batching is the ONLY difference."""
+
+    def __init__(self, params, arch, spec, n_heads):
+        from repro.models import gnn, heads
+        from repro.serve.batching import assemble
+        from repro.serve.engine import _head_slices
+        from repro.serve.queue import RequestQueue
+        self.queue = RequestQueue(spec, depth=100_000, n_heads=n_heads)
+        self._assemble = assemble
+        self._shared = params["shared"]
+        self._heads = _head_slices(params["heads"], n_heads)
+        self.spec = spec
+
+        def forward(shared, head, batch):
+            feats = gnn.egnn_apply(shared, batch, cfg=arch)
+            return heads.branch_apply(head, feats, batch["node_mask"],
+                                      cfg=arch)
+
+        self._predict = jax.jit(forward)
+        self._worker = threading.Thread(target=self._loop, daemon=True,
+                                        name="naive-serve")
+        self._closing = threading.Event()
+        self._worker.start()
+
+    def submit(self, sample, head=0):
+        return self.queue.submit(sample, head)
+
+    def _run_one(self, req):
+        ab = self._assemble([req], req.bucket, 1)
+        batch = {k: jax.numpy.asarray(v) for k, v in ab.batch.items()}
+        e, f = self._predict(self._shared, self._heads[req.head], batch)
+        e, f = np.asarray(e), np.asarray(f)
+        req.future.set_result({"energy": float(e[0]),
+                               "forces": f[0, :req.n_atoms]})
+
+    def _loop(self):
+        while not self._closing.is_set():
+            req = self.queue.get(timeout=0.05)
+            if req is not None:
+                self._run_one(req)
+        for req in self.queue.drain():
+            self._run_one(req)
+
+    def warmup(self):
+        from concurrent.futures import Future
+        from repro.serve.queue import Request, _as_sample
+        sm, na, ne = _as_sample({"species": np.zeros(1, np.int32),
+                                 "pos": np.zeros((1, 3), np.float32)})
+        for a in self.spec.atom_buckets:
+            for e in self.spec.edge_buckets:
+                self._run_one(Request(sample=sm, head=0, bucket=(a, e),
+                                      n_atoms=na, n_edges=ne,
+                                      future=Future(), t_submit=0.0))
+
+    def close(self):
+        self.queue.close()
+        self._closing.set()
+        self._worker.join(timeout=60)
+
+
+# ---------------------------------------------------------------------------
+# open-loop generator
+# ---------------------------------------------------------------------------
+
+def _drive(server, pool, rate, seed):
+    """Submit the pool open-loop at ``rate`` req/s (seeded exponential
+    inter-arrivals), wait for everything, return throughput + e2e latency.
+    Latency is measured OUTSIDE the server — submit call to future-done
+    callback — so both servers are scored by the same clock."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate, size=len(pool))
+    done_at = [None] * len(pool)
+    submit_at = [None] * len(pool)
+    futs = []
+    ev = threading.Event()
+    n_done = [0]
+
+    def _mark(i):
+        def cb(_fut):
+            done_at[i] = time.monotonic()
+            n_done[0] += 1
+            if n_done[0] == len(pool):
+                ev.set()
+        return cb
+
+    t0 = time.monotonic()
+    next_t = t0
+    for i, (sample, head) in enumerate(pool):
+        next_t += gaps[i]
+        while True:                      # hybrid sleep/spin to hold the rate
+            dt = next_t - time.monotonic()
+            if dt <= 0:
+                break
+            time.sleep(min(dt, 1e-3))
+        submit_at[i] = time.monotonic()
+        fut = server.submit(sample, head=head)
+        fut.add_done_callback(_mark(i))
+        futs.append(fut)
+    assert ev.wait(timeout=300), "load run did not drain in 300s"
+    wall = max(done_at) - t0
+    lat_ms = 1e3 * (np.array(done_at) - np.array(submit_at))
+    for f in futs:
+        f.result(timeout=0)              # surface any per-request failure
+    p50, p95, p99 = np.percentile(lat_ms, (50, 95, 99))
+    return {
+        "offered_rate_per_s": rate,
+        "n_requests": len(pool),
+        "wall_s": wall,
+        "throughput_per_s": len(pool) / wall,
+        "latency_ms": {"p50": float(p50), "p95": float(p95),
+                       "p99": float(p99), "mean": float(lat_ms.mean()),
+                       "max": float(lat_ms.max())},
+    }
+
+
+def _calibrate_mu(naive, pool, n):
+    """Warm sequential B=1 rate (req/s) of the naive server — the rate axis
+    every load point is expressed against."""
+    for sample, head in pool[:3]:
+        naive.submit(sample, head=head).result(timeout=60)
+    t0 = time.monotonic()
+    for sample, head in pool[:n]:
+        naive.submit(sample, head=head).result(timeout=60)
+    return n / (time.monotonic() - t0)
+
+
+# ---------------------------------------------------------------------------
+
+
+def run(p, smoke):
+    from repro.serve import ServeSession
+    params, arch, spec, sources = _build(p)
+    pool = _request_pool(sources, p["n_requests"], seed=1)
+
+    naive = NaiveServer(params, arch, spec, n_heads=len(sources))
+    naive.warmup()
+    mu = _calibrate_mu(naive, pool, p["calib"])
+    rates = [f * mu for f in p["rate_factors"]]
+
+    cont = ServeSession(params, arch, spec=spec, max_batch=p["max_batch"],
+                        max_wait_ms=p["max_wait_ms"],
+                        queue_depth=100_000, seed=0)
+    cont.warmup()
+
+    runs = []
+    for k, rate in enumerate(rates):
+        row = {"rate_factor_vs_mu": p["rate_factors"][k]}
+        row["naive"] = _drive(naive, pool, rate, seed=10 + k)
+        row["continuous"] = _drive(cont, pool, rate, seed=10 + k)
+        row["throughput_ratio"] = (row["continuous"]["throughput_per_s"]
+                                   / row["naive"]["throughput_per_s"])
+        runs.append(row)
+
+    stats = cont.stats()
+    cont.close()
+    naive.close()
+    return {
+        "meta": {
+            "benchmark": "bench_serve",
+            "backend": jax.default_backend(),
+            "jax": jax.__version__,
+            "smoke": smoke,
+            "model": {k: p[k] for k in ("hidden", "layers", "head_hidden")},
+            "serve": {"max_batch": p["max_batch"],
+                      "max_wait_ms": p["max_wait_ms"]},
+            "bucket_grid": {"atoms": list(spec.atom_buckets),
+                            "edges": list(spec.edge_buckets)},
+            "n_heads": len(sources),
+            "naive_service_rate_per_s": mu,
+        },
+        "runs": runs,
+        "engine": {
+            "counters": stats["counters"],
+            "executable_cache": stats["executable_cache"],
+            "stage_latency_ms": stats["latency"],
+            "batch_occupancy": stats["batch_occupancy"],
+        },
+    }
+
+
+def validate(result: dict):
+    """Smoke contract: >= 3 rates with full percentile rows, compilations
+    within the bucket-grid budget, and continuous batching >= 2x naive
+    throughput at the highest offered rate (the ISSUE-6 acceptance bar)."""
+    runs = result["runs"]
+    assert len(runs) >= 3, f"need >= 3 arrival rates, got {len(runs)}"
+    for row in runs:
+        for server in ("naive", "continuous"):
+            lm = row[server]["latency_ms"]
+            for q in ("p50", "p95", "p99"):
+                assert np.isfinite(lm[q]) and lm[q] >= 0, (server, lm)
+            assert row[server]["throughput_per_s"] > 0
+    eng = result["engine"]
+    assert eng["counters"]["compilations"] <= \
+        eng["executable_cache"]["budget"], eng
+    assert eng["counters"]["failed"] == 0, eng
+    top = runs[-1]
+    assert top["throughput_ratio"] >= 2.0, \
+        (f"continuous batching must be >= 2x naive at the highest rate; "
+         f"got {top['throughput_ratio']:.2f}x")
+    json.dumps(result)   # serializable
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny model + short streams; assert valid JSON")
+    ap.add_argument("--out", default=os.path.join(REPO_ROOT,
+                                                  "BENCH_serve.json"))
+    args = ap.parse_args(argv)
+    p = SMOKE if args.smoke else FULL
+    result = run(p, args.smoke)
+    validate(result)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1)
+
+    print("name,value,derived")
+    mu = result["meta"]["naive_service_rate_per_s"]
+    print(f"serve_mu/naive_per_s,{mu:.0f},warm B=1")
+    for row in result["runs"]:
+        fac = row["rate_factor_vs_mu"]
+        for server in ("naive", "continuous"):
+            r = row[server]
+            print(f"serve_thr_{fac}x/{server},"
+                  f"{r['throughput_per_s']:.0f},"
+                  f"p50={r['latency_ms']['p50']:.1f}ms "
+                  f"p99={r['latency_ms']['p99']:.1f}ms")
+    top = result["runs"][-1]
+    eng = result["engine"]
+    print(f"# continuous {top['throughput_ratio']:.2f}x naive at "
+          f"{top['rate_factor_vs_mu']}x mu; "
+          f"{eng['counters']['compilations']} compilations / budget "
+          f"{eng['executable_cache']['budget']}; "
+          f"occupancy {eng['batch_occupancy']:.2f}; wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -45,6 +45,16 @@ ATOM_KEYS = ("species", "pos", "node_mask", "forces")
 EDGE_KEYS = ("edge_src", "edge_dst", "edge_mask")
 
 
+class BucketOverflowError(ValueError):
+    """A sample's atom/edge count exceeds the grid's largest bucket.
+
+    Raised by ``BucketSpec.bucket_for`` — at training time this means the
+    planner did not cover the data (``from_sources`` always includes the
+    stored cap, so it cannot happen there); at serving time it is the
+    admission-control signal: the request cannot be padded to any compiled
+    shape and must be rejected, not silently truncated."""
+
+
 def _ceil_grid(counts: np.ndarray, n_buckets: int, cap: int,
                multiple: int) -> tuple:
     """Ascending pad ceilings covering ``counts``: quantile cut points
@@ -76,14 +86,30 @@ class BucketSpec:
     def n_shapes(self) -> int:
         return len(self.atom_buckets) * len(self.edge_buckets)
 
-    def ceil(self, n_atoms: int, n_edges: int) -> tuple:
-        """Smallest (A_pad, E_pad) bucket shape holding the given content.
-        Counts beyond the grid raise — the planner must cover the data."""
+    def bucket_for(self, n_atoms: int, n_edges: int) -> tuple:
+        """Public single-sample lookup: the smallest (A_pad, E_pad) bucket
+        shape covering the given content (ceilings are inclusive). Counts
+        beyond the grid cap raise ``BucketOverflowError`` with the offending
+        count and the cap — training planners must cover the data; serving
+        admission uses the error to reject oversized requests up front."""
+        if n_atoms < 0 or n_edges < 0:
+            raise ValueError(f"negative content counts: "
+                             f"({n_atoms} atoms, {n_edges} edges)")
         a = next((b for b in self.atom_buckets if b >= n_atoms), None)
         e = next((b for b in self.edge_buckets if b >= n_edges), None)
-        assert a is not None, f"{n_atoms} atoms exceeds grid {self.atom_buckets}"
-        assert e is not None, f"{n_edges} edges exceeds grid {self.edge_buckets}"
+        if a is None:
+            raise BucketOverflowError(
+                f"{n_atoms} atoms exceeds the grid cap "
+                f"{self.atom_buckets[-1]} (atom_buckets={self.atom_buckets})")
+        if e is None:
+            raise BucketOverflowError(
+                f"{n_edges} edges exceeds the grid cap "
+                f"{self.edge_buckets[-1]} (edge_buckets={self.edge_buckets})")
         return a, e
+
+    def ceil(self, n_atoms: int, n_edges: int) -> tuple:
+        """Alias of ``bucket_for`` (the original batch-path name)."""
+        return self.bucket_for(n_atoms, n_edges)
 
     @classmethod
     def from_sources(cls, sources, *, n_atom_buckets: int = 4,
@@ -158,8 +184,8 @@ class BucketingBatcher:
         b = self.batcher.next_batch()
         nm, em = np.asarray(b["node_mask"]), np.asarray(b["edge_mask"])
         axis = nm.ndim - 1               # atom/edge axis: 1 flat, 2 task-major
-        a_pad, e_pad = self.spec.ceil(int(nm.sum(-1).max(initial=0)),
-                                      int(em.sum(-1).max(initial=0)))
+        a_pad, e_pad = self.spec.bucket_for(int(nm.sum(-1).max(initial=0)),
+                                            int(em.sum(-1).max(initial=0)))
         self.shapes_seen.add((a_pad, e_pad))
         out = {}
         for k, v in b.items():

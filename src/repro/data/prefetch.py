@@ -71,6 +71,7 @@ class Prefetcher:
             self._consumed_state = None
             self._trackable = False
         self._err: BaseException | None = None
+        self._closed = False
         self._start()
 
     def _start(self):
@@ -158,6 +159,7 @@ class Prefetcher:
         self.batcher.restore(state)
         self._consumed_state = self.batcher.state()
         self._err = None
+        self._closed = False
         self._start()
 
     # -- shutdown -----------------------------------------------------------
@@ -177,9 +179,16 @@ class Prefetcher:
             self._thread.join(timeout=5.0)
 
     def close(self):
-        """Stop the producer and discard queued batches. Idempotent.
-        (``restore()`` revives a closed Prefetcher; ``next_batch()`` on a
-        closed one raises.)"""
+        """Stop the producer and discard queued batches. Repeated shutdown
+        is a strict no-op: the second ``close()`` (or a ``close()`` followed
+        by context-manager ``__exit__``) returns immediately without
+        re-draining or re-joining — a producer stuck past the join timeout
+        previously made every extra ``close()`` block for the full timeout
+        again. (``restore()`` revives a closed Prefetcher and re-arms
+        ``close()``; ``next_batch()`` on a closed one raises.)"""
+        if self._closed:
+            return
+        self._closed = True
         self._halt()
 
     def __enter__(self):

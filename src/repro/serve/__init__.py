@@ -1,0 +1,23 @@
+"""repro.serve — high-throughput property-prediction serving.
+
+The inference-side counterpart of ``repro.engine``: a trained multi-head
+GNN (any ``{"shared", "heads"}`` parameter tree) behind an async request
+queue with continuous size-binned batching. Requests of similar atom/edge
+counts coalesce — via the SAME ``BucketSpec`` grid training batches with —
+into one padded batch per bucket, executed by a per-(bucket, head) compiled
+cache whose recompile budget is the bucket grid. See docs/serving.md.
+
+    from repro.serve import ServeSession
+    with ServeSession(params, arch, spec=spec) as srv:
+        fut = srv.submit({"species": z, "pos": x, ...}, head=2)
+        print(fut.result()["energy"])
+"""
+from .batching import AssembledBatch, SizeBinnedBatcher, assemble
+from .engine import ServeSession
+from .metrics import Reservoir, ServeMetrics
+from .queue import Request, RequestQueue
+
+__all__ = [
+    "AssembledBatch", "Request", "RequestQueue", "Reservoir",
+    "ServeMetrics", "ServeSession", "SizeBinnedBatcher", "assemble",
+]

@@ -1,0 +1,154 @@
+"""Continuous size-binned request batching.
+
+Training already solved the padding-waste-vs-recompile tradeoff with
+``BucketSpec`` (quantized pad-shape grids, ``repro.data.bucketing``); at
+serving time the SAME grid becomes the coalescing rule: requests whose
+(atom, edge) counts land in the same bucket are padded to one shared shape
+and run as one batch, so the compiled-shape universe of the serving engine
+is exactly the training bucket grid.
+
+"Continuous" in the vLLM sense, adapted to fixed-shape XLA executables: the
+binner never waits for an epoch or a fixed batch — as requests stream in it
+holds at most one open bin per (bucket, head) and releases it the moment it
+is **full** (``max_batch`` requests) or **expired** (its oldest request has
+waited ``max_wait``). The deadline bounds tail latency under low arrival
+rates: a lone request costs at most ``max_wait`` + one forward, it never
+waits for a full batch that will not come.
+
+The released batch is padded to a STATIC shape (``max_batch`` rows at the
+bucket's (A_pad, E_pad)) with inert rows — all-pad structures whose node
+masks are empty and whose edges point at the ``A_pad`` sentinel (the
+``>= n_nodes`` kernel contract, see docs/kernels.md) — so partial flushes
+reuse the full batch's executable instead of compiling a (k, ...) variant
+per occupancy k.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .queue import Request
+
+
+@dataclasses.dataclass
+class AssembledBatch:
+    """One ready-to-run padded batch: ``batch`` is the (max_batch, A_pad,
+    ...) dict the compiled forward takes; ``requests`` (length ``n_real``
+    <= max_batch) maps row i back to the future to resolve."""
+    batch: dict
+    requests: list[Request]
+    bucket: tuple
+    head: int
+
+    @property
+    def n_real(self) -> int:
+        return len(self.requests)
+
+
+def assemble(requests: list[Request], bucket: tuple,
+             max_batch: int) -> AssembledBatch:
+    """Pad-and-stack admitted requests into one (max_batch, A_pad/E_pad)
+    batch. Every request must already be binned into ``bucket`` (admission
+    guarantees content fits); rows beyond ``len(requests)`` are inert pad
+    structures. Edge endpoints of masked/pad edges are re-pointed at the
+    ``A_pad`` sentinel — same contract as ``BucketingBatcher``."""
+    assert 1 <= len(requests) <= max_batch, (len(requests), max_batch)
+    a_pad, e_pad = bucket
+    head = requests[0].head
+    B = max_batch
+    species = np.zeros((B, a_pad), np.int32)
+    pos = np.zeros((B, a_pad, 3), np.float32)
+    src = np.full((B, e_pad), a_pad, np.int32)
+    dst = np.full((B, e_pad), a_pad, np.int32)
+    nmask = np.zeros((B, a_pad), bool)
+    emask = np.zeros((B, e_pad), bool)
+    for i, r in enumerate(requests):
+        assert r.bucket == bucket and r.head == head, \
+            "batcher invariant: one (bucket, head) per assembled batch"
+        s = r.sample
+        nm, em = s["node_mask"], s["edge_mask"]
+        # stored arrays may be longer than the bucket (a small structure
+        # submitted in a big padded container): admission checked CONTENT
+        # fits, so trailing storage beyond A_pad/E_pad is pad by contract
+        na = min(nm.shape[0], a_pad)
+        ne = min(em.shape[0], e_pad)
+        # admission enforces front-packed masks and bucket_for sized the
+        # bucket to the content, so the tail beyond the bucket is pure pad
+        assert not (nm[na:].any() or em[ne:].any()), \
+            "assemble invariant: real content beyond the assigned bucket"
+        species[i, :na] = np.where(nm[:na], s["species"][:na], 0)
+        pos[i, :na] = np.where(nm[:na, None], s["pos"][:na], 0.0)
+        nmask[i, :na] = nm[:na]
+        emask[i, :ne] = em[:ne]
+        src[i, :ne] = np.where(em[:ne], s["edge_src"][:ne], a_pad)
+        dst[i, :ne] = np.where(em[:ne], s["edge_dst"][:ne], a_pad)
+    return AssembledBatch(
+        batch={"species": species, "pos": pos, "edge_src": src,
+               "edge_dst": dst, "node_mask": nmask, "edge_mask": emask},
+        requests=list(requests), bucket=bucket, head=head)
+
+
+class SizeBinnedBatcher:
+    """Accumulate requests into per-(bucket, head) bins; release full or
+    expired bins. Single-consumer (the engine worker owns it) — no locking.
+
+    max_batch: rows per compiled batch (the static leading dim).
+    max_wait:  seconds the OLDEST request of a bin may wait before the bin
+               is flushed partially filled (the p99 bound at low rates).
+    """
+
+    def __init__(self, *, max_batch: int = 8, max_wait: float = 0.005):
+        assert max_batch >= 1 and max_wait >= 0.0
+        self.max_batch = max_batch
+        self.max_wait = max_wait
+        self._bins: dict[tuple, list[Request]] = {}   # (bucket, head) -> reqs
+
+    def add(self, req: Request) -> AssembledBatch | None:
+        """File one request; returns an AssembledBatch immediately when it
+        fills its bin, else None (the bin keeps waiting)."""
+        key = (req.bucket, req.head)
+        bin_ = self._bins.setdefault(key, [])
+        bin_.append(req)
+        if len(bin_) >= self.max_batch:
+            del self._bins[key]
+            return assemble(bin_, req.bucket, self.max_batch)
+        return None
+
+    def expired(self, now: float) -> list[AssembledBatch]:
+        """Bins whose oldest request has waited past ``max_wait``, assembled
+        (possibly partial). Deterministic order: by that oldest timestamp."""
+        due = [(bin_[0].t_submit, key) for key, bin_ in self._bins.items()
+               if now - bin_[0].t_submit >= self.max_wait]
+        out = []
+        for _, key in sorted(due):
+            bin_ = self._bins.pop(key)
+            out.append(assemble(bin_, key[0], self.max_batch))
+        return out
+
+    def flush(self) -> list[AssembledBatch]:
+        """Assemble every pending bin regardless of age (shutdown drain)."""
+        out = [assemble(bin_, key[0], self.max_batch)
+               for key, bin_ in sorted(self._bins.items(),
+                                       key=lambda kv: kv[1][0].t_submit)]
+        self._bins.clear()
+        return out
+
+    def next_deadline(self, now: float) -> float | None:
+        """Seconds until the earliest pending bin expires (<= 0: already
+        due); None when no bins are waiting. The engine worker uses this as
+        its queue-poll timeout so deadline flushes fire on time."""
+        if not self._bins:
+            return None
+        oldest = min(bin_[0].t_submit for bin_ in self._bins.values())
+        return (oldest + self.max_wait) - now
+
+    @property
+    def n_pending(self) -> int:
+        return sum(len(b) for b in self._bins.values())
+
+    def pending_requests(self) -> list[Request]:
+        """The raw requests still binned, without assembling (failure-path
+        cleanup: resolve their futures even when assembly itself is what
+        broke)."""
+        return [r for b in self._bins.values() for r in b]

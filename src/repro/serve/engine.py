@@ -1,0 +1,321 @@
+"""ServeSession — the request-serving engine for trained multi-head GNNs.
+
+Turns a trained ``{"shared", "heads"}`` parameter tree (the MultiTaskModel
+layout every ``repro.engine`` training session produces) into a
+property-prediction server:
+
+  caller threads ── submit(sample, head) ──► RequestQueue (bounded, admits
+                                             via BucketSpec.bucket_for)
+                                                 │
+                               worker thread ────┤ SizeBinnedBatcher
+                                                 │   coalesce per (bucket,
+                                                 │   head); flush on full
+                                                 │   batch or max_wait
+                                                 ▼
+                          compiled forward (jit egnn_apply + branch_apply)
+                                                 │
+                     scatter rows back to request futures + ServeMetrics
+
+The executable cache is keyed per (bucket-shape, head): every (bucket,
+head) pair binds the head's parameter slice to ONE shared jitted forward,
+so XLA compiles at most one variant per bucket shape — head slices have
+identical shapes/dtypes and hit the jit cache. The recompile budget is
+therefore the bucket grid, exactly as in training (``len(atom_buckets) x
+len(edge_buckets)`` compilations, <= grid x n_heads cache entries;
+asserted by tests/test_serve_engine.py).
+
+Shutdown follows the ``Prefetcher`` discipline: ``close()`` stops
+admissions, drains everything already queued or binned through the compiled
+path (every accepted future resolves), joins the worker, and is an
+idempotent no-op on re-entry.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import jax
+import numpy as np
+
+from repro.data.bucketing import BucketSpec
+from repro.models import gnn, heads as heads_mod
+
+from .batching import AssembledBatch, SizeBinnedBatcher
+from .metrics import ServeMetrics
+from .queue import RequestQueue
+
+# head-parameter keys that are training-only (loss weighting), never part
+# of the serving forward
+_NON_FORWARD_HEAD_KEYS = ("log_sigma2",)
+
+
+def _head_slices(head_params, n_heads: int) -> list:
+    """Stacked (n_heads, ...) head tree -> per-head parameter trees with
+    training-only leaves dropped."""
+    fwd = {k: v for k, v in head_params.items()
+           if k not in _NON_FORWARD_HEAD_KEYS}
+    return [jax.tree_util.tree_map(lambda v: v[t], fwd)
+            for t in range(n_heads)]
+
+
+class ServeSession:
+    """High-throughput property-prediction serving for one trained model.
+
+    params: ``{"shared": egnn params, "heads": stacked branch params}``
+        (leading head/task dim on every heads leaf).
+    arch:   the ``ArchConfig`` the params were trained with.
+    spec:   the ``BucketSpec`` coalescing grid; None = one bucket at
+        (arch.max_atoms, arch.max_edges) — correct but pays worst-case pad.
+    max_batch:    rows per compiled batch (static leading dim).
+    max_wait_ms:  partial-batch flush deadline (tail-latency bound).
+    queue_depth:  admission backpressure bound.
+    """
+
+    def __init__(self, params: dict, arch, *, spec: BucketSpec | None = None,
+                 max_batch: int = 8, max_wait_ms: float = 5.0,
+                 queue_depth: int = 256, metrics: ServeMetrics | None = None,
+                 clock=time.monotonic, seed: int = 0):
+        if not (isinstance(params, dict) and
+                {"shared", "heads"} <= set(params)):
+            raise ValueError('params must be the MultiTaskModel layout '
+                             '{"shared": ..., "heads": ...}')
+        leaves = jax.tree_util.tree_leaves(
+            {k: v for k, v in params["heads"].items()
+             if k not in _NON_FORWARD_HEAD_KEYS})
+        n_heads = int(leaves[0].shape[0])
+        assert all(int(l.shape[0]) == n_heads for l in leaves), \
+            "heads leaves disagree on the leading head dim"
+        if spec is None:
+            assert arch.max_atoms > 0 and arch.max_edges > 0, \
+                "spec=None needs arch.max_atoms/max_edges to form a bucket"
+            spec = BucketSpec((arch.max_atoms,), (arch.max_edges,))
+        self.arch = arch
+        self.spec = spec
+        self.n_heads = n_heads
+        self.max_batch = max_batch
+        self._clock = clock
+        self._shared = params["shared"]
+        self._heads = _head_slices(params["heads"], n_heads)
+        self.metrics = metrics if metrics is not None else \
+            ServeMetrics(seed=seed)
+        self.queue = RequestQueue(spec, depth=queue_depth, n_heads=n_heads,
+                                  clock=clock, metrics=self.metrics)
+        self.batcher = SizeBinnedBatcher(max_batch=max_batch,
+                                         max_wait=max_wait_ms * 1e-3)
+
+        def forward(shared, head, batch):
+            feats = gnn.egnn_apply(shared, batch, cfg=arch)
+            return heads_mod.branch_apply(head, feats, batch["node_mask"],
+                                          cfg=arch)
+
+        # ONE jitted callable shared by every (bucket, head) cache entry:
+        # head slices are shape/dtype-identical, so only a new BUCKET shape
+        # actually compiles
+        self._predict = jax.jit(forward)
+        self._exec: dict[tuple, object] = {}   # (bucket, head) -> callable
+        self._shapes_compiled: set = set()
+        self._closed = False
+        self._worker_error: BaseException | None = None
+        self._closing = threading.Event()
+        self._worker = threading.Thread(target=self._serve_loop,
+                                        name="serve-worker", daemon=True)
+        self._worker.start()
+
+    # -- construction helpers -----------------------------------------------
+
+    @classmethod
+    def from_checkpoint(cls, path: str, arch, *, model: str = "gfm-mtl",
+                        n_heads: int | None = None, **kw) -> "ServeSession":
+        """Load params written by ``Session``/``checkpoint.save`` (the
+        ``{"params": ...}`` tree) and serve them. The template comes from
+        the registry model's ``init`` under ``jax.eval_shape`` — zero
+        allocation, restored leaves land as the checkpoint's values."""
+        from repro.engine.registry import build_model
+        from repro.train import checkpoint
+        built = build_model(model, arch,
+                            n_tasks=n_heads or arch.n_tasks or None)
+        template = jax.eval_shape(built.init, jax.random.PRNGKey(0))
+        params = checkpoint.restore(path, {"params": template})["params"]
+        return cls(params, arch, **kw)
+
+    # -- public API ----------------------------------------------------------
+
+    def submit(self, sample: dict, head: int = 0):
+        """Admit one structure; returns a Future resolving to
+        ``{"energy": float, "forces": (n_atoms, 3) float32}``."""
+        self._check_alive()
+        return self.queue.submit(sample, head)
+
+    def submit_many(self, samples, heads=0) -> list:
+        self._check_alive()
+        return self.queue.submit_many(samples, heads)
+
+    def predict_one(self, sample: dict, head: int = 0) -> dict:
+        """Synchronous single-request forward through the SAME executable a
+        batched run uses (one real row, ``max_batch - 1`` inert pad rows) —
+        the parity reference for the batched-and-scattered path, and a
+        convenience for offline use. Bypasses the queue/worker."""
+        from .queue import Request, _as_sample
+        canon, n_atoms, n_edges = _as_sample(sample)
+        bucket = self.spec.bucket_for(n_atoms, n_edges)
+        req = Request(sample=canon, head=head, bucket=bucket,
+                      n_atoms=n_atoms, n_edges=n_edges, future=None,
+                      t_submit=self._clock())
+        from .batching import assemble
+        ab = assemble([req], bucket, self.max_batch)
+        e, f = self._executable(bucket, head)(ab.batch)
+        e, f = np.asarray(e), np.asarray(f)
+        return {"energy": float(e[0]), "forces": f[0, :n_atoms]}
+
+    def warmup(self, buckets=None) -> int:
+        """Pre-compile executables (head 0) for the given buckets (default:
+        the full grid) so first requests don't pay compile latency. Returns
+        the number of compiled shapes afterwards."""
+        if buckets is None:
+            buckets = [(a, e) for a in self.spec.atom_buckets
+                       for e in self.spec.edge_buckets]
+        for bucket in buckets:
+            a_pad, e_pad = bucket
+            dummy = {"species": np.zeros((self.max_batch, a_pad), np.int32),
+                     "pos": np.zeros((self.max_batch, a_pad, 3), np.float32),
+                     "edge_src": np.full((self.max_batch, e_pad), a_pad,
+                                         np.int32),
+                     "edge_dst": np.full((self.max_batch, e_pad), a_pad,
+                                         np.int32),
+                     "node_mask": np.zeros((self.max_batch, a_pad), bool),
+                     "edge_mask": np.zeros((self.max_batch, e_pad), bool)}
+            e, f = self._executable(bucket, 0)(dummy)
+            jax.block_until_ready((e, f))
+        return len(self._shapes_compiled)
+
+    def stats(self) -> dict:
+        """Metrics snapshot + executable-cache occupancy (plain dict)."""
+        out = self.metrics.snapshot()
+        out["executable_cache"] = {
+            "entries": len(self._exec),
+            "compiled_shapes": len(self._shapes_compiled),
+            "budget": self.spec.n_shapes * self.n_heads,
+        }
+        return out
+
+    def close(self):
+        """Graceful shutdown: stop admissions, drain every queued/binned
+        request through the compiled path (all accepted futures resolve),
+        join the worker. Idempotent no-op on re-entry."""
+        if self._closed:
+            return
+        self._closed = True
+        self.queue.close()
+        self._closing.set()
+        self._worker.join(timeout=60.0)
+        if self._worker.is_alive():
+            raise RuntimeError("serve worker did not drain within 60s")
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+    # -- worker ---------------------------------------------------------------
+
+    def _check_alive(self):
+        if self._closed:
+            raise RuntimeError("ServeSession is closed")
+        if self._worker_error is not None:
+            raise RuntimeError("serve worker died") from self._worker_error
+
+    def _executable(self, bucket: tuple, head: int):
+        """The per-(bucket, head) cache entry: the shared jitted forward
+        with this head's parameter slice bound. Counts a compilation only
+        when the bucket SHAPE is new — same-shape entries for other heads
+        reuse the compiled executable."""
+        key = (bucket, head)
+        fn = self._exec.get(key)
+        if fn is None:
+            if bucket not in self._shapes_compiled:
+                self._shapes_compiled.add(bucket)
+                self.metrics.inc("compilations")
+            hp = self._heads[head]
+            shared = self._shared
+
+            def fn(batch, _p=self._predict, _s=shared, _h=hp):
+                return _p(_s, _h, batch)
+
+            self._exec[key] = fn
+        return fn
+
+    def _execute(self, ab: AssembledBatch):
+        """Run one assembled batch and scatter rows to futures."""
+        t0 = self._clock()
+        try:
+            e, f = self._executable(ab.bucket, ab.head)(ab.batch)
+            e, f = np.asarray(e), np.asarray(f)   # blocks until ready
+        except BaseException as err:
+            for r in ab.requests:
+                r.future.set_exception(err)
+            self.metrics.inc("failed", len(ab.requests))
+            return
+        t1 = self._clock()
+        self.metrics.observe("compute", t1 - t0)
+        self.metrics.inc("batches")
+        self.metrics.inc("batch_slots", self.max_batch)
+        self.metrics.inc("batch_real", ab.n_real)
+        for i, r in enumerate(ab.requests):
+            r.t_done = self._clock()
+            r.future.set_result(
+                {"energy": float(e[i]), "forces": f[i, :r.n_atoms]})
+            self.metrics.observe("e2e", r.t_done - r.t_submit)
+        self.metrics.inc("completed", ab.n_real)
+
+    def _file(self, req) -> AssembledBatch | None:
+        req.t_dequeue = self._clock()
+        self.metrics.observe("queue_wait", req.t_dequeue - req.t_submit)
+        t0 = self._clock()
+        ab = self.batcher.add(req)
+        if ab is not None:
+            self.metrics.observe("assembly", self._clock() - t0)
+        return ab
+
+    def _serve_loop(self):
+        try:
+            while not self._closing.is_set():
+                now = self._clock()
+                deadline = self.batcher.next_deadline(now)
+                # poll timeout: wake for the earliest bin deadline, else a
+                # coarse tick so close() is observed promptly
+                timeout = 0.05 if deadline is None \
+                    else min(max(deadline, 0.0), 0.05)
+                req = self.queue.get(timeout=timeout)
+                if req is not None:
+                    # greedy drain: file the WHOLE backlog before computing.
+                    # Under load, dequeued requests are usually already past
+                    # their deadline (they aged in the queue), so filing one
+                    # at a time would flush every bin one-deep; filing the
+                    # backlog first lets bins reach max_batch occupancy.
+                    ready = [ab for r in [req] + self.queue.drain()
+                             if (ab := self._file(r)) is not None]
+                    for ab in ready:
+                        self._execute(ab)
+                t0 = self._clock()
+                expired = self.batcher.expired(self._clock())
+                if expired:
+                    dt = (self._clock() - t0) / len(expired)
+                    for ab in expired:
+                        self.metrics.observe("assembly", dt)
+                        self._execute(ab)
+            # graceful drain: admissions are closed, so the queue can only
+            # shrink — run everything left through the compiled path
+            for req in self.queue.drain():
+                ab = self._file(req)
+                if ab is not None:
+                    self._execute(ab)
+            for ab in self.batcher.flush():
+                self._execute(ab)
+        except BaseException as err:   # fail loudly, never hang futures
+            self._worker_error = err
+            pending = self.queue.drain() + self.batcher.pending_requests()
+            for req in pending:
+                req.future.set_exception(err)
+            self.metrics.inc("failed", len(pending))

@@ -5,7 +5,8 @@ import numpy as np
 import pytest
 
 from repro.data.bucketing import (ATOM_KEYS, EDGE_KEYS, BucketingBatcher,
-                                  BucketSpec, pad_fraction)
+                                  BucketOverflowError, BucketSpec,
+                                  pad_fraction)
 from repro.data.loader import GroupBatcher
 from repro.data.synthetic_atoms import generate_mixture, source_dicts
 
@@ -26,10 +27,32 @@ def test_spec_validation_and_ceil():
     assert spec.ceil(1, 1) == (8, 64)
     assert spec.ceil(8, 64) == (8, 64)       # inclusive ceilings
     assert spec.ceil(9, 65) == (16, 256)
-    with pytest.raises(AssertionError):
+    with pytest.raises(BucketOverflowError):
         spec.ceil(33, 1)                      # beyond the grid
     with pytest.raises(AssertionError):
         BucketSpec((16, 8), (64,))            # not ascending
+
+
+def test_bucket_for_boundaries_and_overflow():
+    """The public single-sample lookup (serve admission + BucketingBatcher
+    both route through it): inclusive ceilings at every grid boundary, and
+    a clear BucketOverflowError naming the offending axis beyond the cap."""
+    spec = BucketSpec((8, 16), (64, 128))
+    # exact boundary on each axis stays in the smaller bucket
+    assert spec.bucket_for(8, 128) == (8, 128)
+    assert spec.bucket_for(16, 64) == (16, 64)
+    assert spec.bucket_for(0, 0) == (8, 64)   # empty structure still binned
+    assert spec.bucket_for(16, 128) == (16, 128)   # grid cap itself fits
+    with pytest.raises(BucketOverflowError, match="17 atoms"):
+        spec.bucket_for(17, 1)
+    with pytest.raises(BucketOverflowError, match="129 edges"):
+        spec.bucket_for(1, 129)
+    # BucketOverflowError is a ValueError: callers without the serve
+    # admission path in mind still fail loudly, not with a bare assert
+    with pytest.raises(ValueError):
+        spec.bucket_for(99, 99)
+    with pytest.raises(ValueError, match="negative"):
+        spec.bucket_for(-1, 0)
 
 
 def test_spec_from_sources_covers_data_and_is_capped():

@@ -71,6 +71,45 @@ def test_close_is_idempotent_and_next_batch_after_close_raises():
         pf.next_batch()
 
 
+def test_repeated_shutdown_is_a_no_op(monkeypatch):
+    """Regression: re-entrant shutdown (double close(), or close() followed
+    by context-manager __exit__) must not re-run the halt machinery — with a
+    producer stuck past the join timeout, every extra close() used to block
+    for the full drain+join again. Only the FIRST close may halt."""
+    pf = Prefetcher(SingleBatcher({"x": np.arange(8)}, 2, seed=0))
+    halts = {"n": 0}
+    real_halt = pf._halt
+
+    def counting_halt():
+        halts["n"] += 1
+        real_halt()
+
+    monkeypatch.setattr(pf, "_halt", counting_halt)
+    with pf:                # __exit__ is the second shutdown entry
+        pf.close()
+        pf.close()
+    pf.close()
+    assert halts["n"] == 1, "re-entrant close() must be a strict no-op"
+    with pytest.raises(RuntimeError, match="closed"):
+        pf.next_batch()
+
+
+def test_restore_revives_and_rearms_close():
+    """restore() on a closed Prefetcher restarts the producer AND re-arms
+    the shutdown path, so the close -> restore -> close lifecycle works."""
+    pf = Prefetcher(SingleBatcher({"x": np.arange(8)}, 2, seed=0))
+    first = pf.next_batch()
+    snap = pf.state()
+    pf.close()
+    pf.close()                      # no-op
+    pf.restore(snap)
+    assert pf.next_batch()["x"].shape == first["x"].shape
+    thread = pf._thread
+    assert thread.is_alive()
+    pf.close()                      # must actually halt the NEW producer
+    assert not thread.is_alive()
+
+
 def test_exception_inside_transform_propagates():
     """transform runs on the producer thread; its exceptions must surface
     from next_batch() like batcher exceptions do."""

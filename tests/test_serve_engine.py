@@ -1,0 +1,387 @@
+"""repro.serve — the property-prediction serving engine.
+
+Covers the ISSUE-6 contracts: batched-and-scattered predictions bitwise-
+match the single-request forward for every head; a lone request flushes at
+the max_wait deadline instead of waiting for a full bucket; shutdown drains
+everything in flight; metrics counters reconcile with what was submitted;
+and the compiled-executable cache stays within the bucket-grid budget."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.mtl import make_gfm_mtl
+from repro.data.bucketing import BucketOverflowError, BucketSpec
+from repro.data.synthetic_atoms import generate_mixture, source_dicts
+from repro.serve import (Reservoir, ServeSession, SizeBinnedBatcher,
+                         assemble)
+from repro.serve.queue import RequestQueue
+
+CFG = ArchConfig(name="serve-test", family="gnn", gnn_hidden=16,
+                 gnn_layers=2, n_species=64, head_hidden=8, head_layers=2,
+                 remat=False, compute_dtype=jnp.float32)
+SPEC = BucketSpec((8, 16), (32, 64))
+
+
+@pytest.fixture(scope="module")
+def served():
+    """(params, sources): one tiny trained-shape model + five-source data,
+    shared across tests (init dominates test time otherwise)."""
+    sources = source_dicts(generate_mixture(40, max_atoms=16, max_edges=64))
+    model = make_gfm_mtl(CFG, len(sources))
+    params = model.init(jax.random.PRNGKey(0))
+    return params, sources
+
+
+def _sample(sources, t, i):
+    s = sources[t]
+    i = i % s["species"].shape[0]        # small sources wrap around
+    return {k: s[k][i] for k in ("species", "pos", "edge_src", "edge_dst",
+                                 "node_mask", "edge_mask")}
+
+
+# ---------------------------------------------------------------------------
+# correctness: batched == single-request, per head
+# ---------------------------------------------------------------------------
+
+def test_batched_predictions_bitwise_match_single_request(served):
+    """Every head, mixed bucket sizes, submitted together so the binner
+    coalesces them — each scattered row must BITWISE match the same request
+    run alone through predict_one (one real row + inert pad rows, same
+    executable). Rows are independent through the whole forward, so
+    coalescing must not change a single bit."""
+    params, sources = served
+    with ServeSession(params, CFG, spec=SPEC, max_batch=4,
+                      max_wait_ms=2.0) as srv:
+        jobs = [(t, _sample(sources, t, i))
+                for t in range(len(sources)) for i in range(3)]
+        futs = [(t, sm, srv.submit(sm, head=t)) for t, sm in jobs]
+        for t, sm, fut in futs:
+            got = fut.result(timeout=60)
+            ref = srv.predict_one(sm, head=t)
+            assert got["energy"] == ref["energy"], (t, got, ref)
+            np.testing.assert_array_equal(got["forces"], ref["forces"])
+            n_atoms = int(np.asarray(sm["node_mask"]).sum())
+            assert got["forces"].shape == (n_atoms, 3)
+
+
+def test_prediction_matches_plain_jnp_forward(served):
+    """predict_one itself is honest: it equals the un-served egnn +
+    branch forward on the padded batch (so the whole serve path is the
+    model, not an approximation of it)."""
+    from repro.models import gnn, heads
+    params, sources = served
+    with ServeSession(params, CFG, spec=SPEC, max_batch=4) as srv:
+        t, sm = 2, _sample(sources, 2, 0)
+        got = srv.predict_one(sm, head=t)
+        a_pad, e_pad = SPEC.bucket_for(int(sm["node_mask"].sum()),
+                                       int(sm["edge_mask"].sum()))
+        batch = {
+            "species": np.where(sm["node_mask"], sm["species"],
+                                0)[None, :a_pad],
+            "pos": (sm["pos"] * sm["node_mask"][:, None])[None, :a_pad],
+            "edge_src": np.where(sm["edge_mask"], sm["edge_src"],
+                                 a_pad)[None, :e_pad].astype(np.int32),
+            "edge_dst": np.where(sm["edge_mask"], sm["edge_dst"],
+                                 a_pad)[None, :e_pad].astype(np.int32),
+            "node_mask": sm["node_mask"][None, :a_pad],
+            "edge_mask": sm["edge_mask"][None, :e_pad],
+        }
+        feats = gnn.egnn_apply(params["shared"],
+                               {k: jnp.asarray(v) for k, v in batch.items()},
+                               cfg=CFG)
+        hp = jax.tree_util.tree_map(lambda v: v[t], params["heads"])
+        e, f = heads.branch_apply(hp, feats,
+                                  jnp.asarray(batch["node_mask"]), cfg=CFG)
+        n = int(sm["node_mask"].sum())
+        np.testing.assert_allclose(got["energy"], float(np.asarray(e)[0]),
+                                   rtol=1e-6)
+        np.testing.assert_allclose(got["forces"], np.asarray(f)[0, :n],
+                                   rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# bounded latency: partial flush
+# ---------------------------------------------------------------------------
+
+def test_lone_request_flushes_at_deadline_not_full_batch(served):
+    """A single request against a huge max_batch must resolve on the
+    max_wait deadline — bounded p99 under low arrival rates."""
+    params, sources = served
+    with ServeSession(params, CFG, spec=SPEC, max_batch=64,
+                      max_wait_ms=20.0) as srv:
+        srv.warmup()                     # exclude compile from the bound
+        fut = srv.submit(_sample(sources, 0, 0), head=0)
+        t0 = time.monotonic()
+        out = fut.result(timeout=10)     # would deadlock if it waited for 64
+        waited = time.monotonic() - t0
+        assert np.isfinite(out["energy"])
+        assert waited < 5.0, f"partial flush took {waited:.2f}s"
+        snap = srv.stats()
+        assert snap["counters"]["batches"] >= 1
+        assert snap["counters"]["batch_real"] < snap["counters"]["batch_slots"]
+
+
+def test_full_bin_releases_before_deadline(served):
+    """max_batch requests of one bucket+head release immediately — the
+    deadline is a bound, not a schedule."""
+    params, sources = served
+    sm = _sample(sources, 0, 0)
+    with ServeSession(params, CFG, spec=SPEC, max_batch=2,
+                      max_wait_ms=10_000.0) as srv:    # absurd deadline
+        srv.warmup()
+        futs = [srv.submit(sm, head=0) for _ in range(2)]
+        for f in futs:
+            f.result(timeout=10)         # would time out if deadline-bound
+
+
+# ---------------------------------------------------------------------------
+# shutdown drains
+# ---------------------------------------------------------------------------
+
+def test_close_drains_in_flight_requests(served):
+    """Everything admitted before close() resolves — queued AND partially
+    binned requests run through the compiled path on shutdown."""
+    params, sources = served
+    srv = ServeSession(params, CFG, spec=SPEC, max_batch=8,
+                       max_wait_ms=10_000.0)   # nothing flushes on its own
+    futs = [srv.submit(_sample(sources, t, i), head=t)
+            for t in range(3) for i in range(3)]
+    srv.close()
+    for f in futs:
+        assert np.isfinite(f.result(timeout=1)["energy"])
+    srv.close()                          # idempotent no-op
+    with pytest.raises(RuntimeError, match="closed"):
+        srv.submit(_sample(sources, 0, 0), head=0)
+    snap = srv.stats()
+    assert snap["counters"]["completed"] == len(futs)
+
+
+def test_close_is_reentrant_from_context_manager(served):
+    params, sources = served
+    with ServeSession(params, CFG, spec=SPEC) as srv:
+        srv.submit(_sample(sources, 0, 0))
+        srv.close()                      # explicit close, then __exit__
+    assert not srv._worker.is_alive()
+
+
+# ---------------------------------------------------------------------------
+# metrics reconcile
+# ---------------------------------------------------------------------------
+
+def test_metrics_counters_reconcile(served):
+    params, sources = served
+    with ServeSession(params, CFG, spec=SPEC, max_batch=4,
+                      max_wait_ms=1.0) as srv:
+        n_ok = 0
+        for t in range(len(sources)):
+            for i in range(4):
+                srv.submit(_sample(sources, t, i), head=t)
+                n_ok += 1
+        with pytest.raises(ValueError):
+            srv.submit(_sample(sources, 0, 0), head=99)   # unknown head
+        big = {"species": np.ones(40, np.int32),
+               "pos": np.zeros((40, 3), np.float32)}
+        with pytest.raises(BucketOverflowError):
+            srv.submit(big, head=0)                       # over the grid cap
+        srv.close()
+        snap = srv.stats()
+    c = snap["counters"]
+    assert c["submitted"] == n_ok
+    assert c["completed"] == n_ok and c["failed"] == 0
+    assert c["rejected"] == 2
+    assert c["batch_real"] == n_ok
+    assert c["batch_slots"] == c["batches"] * 4
+    lat = snap["latency"]
+    assert lat["e2e"]["count"] == n_ok
+    assert lat["queue_wait"]["count"] == n_ok
+    assert lat["e2e"]["p99_ms"] >= lat["e2e"]["p50_ms"] >= 0.0
+
+
+def test_reservoir_is_deterministic_and_bounded():
+    xs = (np.sin(np.arange(10_000)) + 2.0).tolist()
+    a, b = Reservoir(capacity=64, seed=3), Reservoir(capacity=64, seed=3)
+    for x in xs:
+        a.add(x)
+        b.add(x)
+    assert a.percentiles() == b.percentiles()
+    assert len(a._buf) == 64 and a.count == 10_000
+    # exact below capacity
+    c = Reservoir(capacity=64, seed=0)
+    for x in range(11):
+        c.add(float(x))
+    assert c.percentiles((50,))["p50"] == 5.0
+
+
+# ---------------------------------------------------------------------------
+# executable-cache / recompile budget
+# ---------------------------------------------------------------------------
+
+def test_compilations_within_bucket_grid_budget(served):
+    """The acceptance bound: total compilations <= len(atom_buckets) x
+    len(edge_buckets) x n_heads. The engine does strictly better — one
+    shared jitted forward means compilations == distinct bucket shapes —
+    but the asserted budget is the ISSUE's."""
+    params, sources = served
+    n_heads = len(sources)
+    with ServeSession(params, CFG, spec=SPEC, max_batch=2,
+                      max_wait_ms=1.0) as srv:
+        futs = []
+        for t in range(n_heads):
+            for i in range(6):           # sizes spread over the 2x2 grid
+                futs.append(srv.submit(_sample(sources, t, i), head=t))
+        for f in futs:
+            f.result(timeout=60)
+        snap = srv.stats()
+    budget = SPEC.n_shapes * n_heads     # 2 x 2 x 5
+    assert snap["counters"]["compilations"] <= budget, snap
+    assert snap["executable_cache"]["compiled_shapes"] <= SPEC.n_shapes
+    assert snap["executable_cache"]["entries"] <= budget
+    # cross-check the counter against jax's own jit cache when exposed
+    cache_size = getattr(srv._predict, "_cache_size", None)
+    if callable(cache_size):
+        assert cache_size() <= budget, \
+            "jit compiled more variants than the bucket-grid budget"
+
+
+def test_warmup_precompiles_full_grid(served):
+    params, sources = served
+    with ServeSession(params, CFG, spec=SPEC, max_batch=2) as srv:
+        n = srv.warmup()
+        assert n == SPEC.n_shapes
+        assert srv.stats()["counters"]["compilations"] == SPEC.n_shapes
+
+
+# ---------------------------------------------------------------------------
+# admission + queue behaviour
+# ---------------------------------------------------------------------------
+
+def test_admission_rejects_in_caller_thread(served):
+    params, sources = served
+    with ServeSession(params, CFG, spec=SPEC) as srv:
+        with pytest.raises(ValueError, match="front-packed"):
+            bad = dict(_sample(sources, 0, 0))
+            nm = bad["node_mask"].copy()
+            nm[:] = False
+            nm[-1] = True                # real atom in the last slot
+            bad["node_mask"] = nm
+            srv.submit(bad)
+        with pytest.raises(ValueError, match="SINGLE structure"):
+            srv.submit({"species": np.ones((2, 8), np.int32),
+                        "pos": np.zeros((2, 8, 3), np.float32)})
+
+
+def test_masks_derived_when_absent(served):
+    """species+pos(+edges) alone are a valid request — masks default to
+    species>0 / in-range endpoints (the ASE-calculator-style entry)."""
+    params, sources = served
+    sm = _sample(sources, 1, 0)
+    n = int(sm["node_mask"].sum())
+    bare = {"species": sm["species"][:n], "pos": sm["pos"][:n],
+            "edge_src": sm["edge_src"], "edge_dst": sm["edge_dst"]}
+    with ServeSession(params, CFG, spec=SPEC, max_wait_ms=1.0) as srv:
+        out = srv.submit(bare, head=1).result(timeout=30)
+        ref = srv.predict_one(sm, head=1)
+        assert out["energy"] == ref["energy"]
+
+
+def test_queue_backpressure_and_close():
+    q = RequestQueue(SPEC, depth=1, n_heads=1)
+    sm = {"species": np.ones(4, np.int32), "pos": np.zeros((4, 3),
+                                                           np.float32)}
+    q.submit(sm)                         # fills the single slot
+    blocked = threading.Event()
+
+    def second():
+        blocked.set()
+        with pytest.raises(RuntimeError, match="closed"):
+            q.submit(sm)                 # blocks, then unblocked by close
+
+    th = threading.Thread(target=second, daemon=True)
+    th.start()
+    blocked.wait(2.0)
+    time.sleep(0.1)
+    q.close()
+    th.join(timeout=5.0)
+    assert not th.is_alive(), "close() must unblock a waiting submit()"
+    q.close()                            # idempotent
+    assert len(q.drain()) == 1
+
+
+# ---------------------------------------------------------------------------
+# binner unit behaviour
+# ---------------------------------------------------------------------------
+
+def _req(n_atoms, head=0, t=0.0, bucket=(8, 32)):
+    from repro.serve.queue import Request, _as_sample
+    sm, na, ne = _as_sample({"species": np.ones(n_atoms, np.int32),
+                             "pos": np.zeros((n_atoms, 3), np.float32)})
+    return Request(sample=sm, head=head, bucket=bucket, n_atoms=na,
+                   n_edges=ne, future=None, t_submit=t)
+
+
+def test_binner_separates_buckets_and_heads():
+    bb = SizeBinnedBatcher(max_batch=2, max_wait=1.0)
+    assert bb.add(_req(4, head=0)) is None
+    assert bb.add(_req(4, head=1)) is None       # other head: other bin
+    assert bb.add(_req(4, head=0, bucket=(16, 32))) is None   # other bucket
+    ab = bb.add(_req(4, head=0))                 # fills the first bin
+    assert ab is not None and ab.n_real == 2 and ab.head == 0
+    assert bb.n_pending == 2
+    assert len(bb.flush()) == 2 and bb.n_pending == 0
+
+
+def test_binner_deadline_and_static_shape():
+    bb = SizeBinnedBatcher(max_batch=4, max_wait=0.5)
+    bb.add(_req(4, t=0.0))
+    assert bb.expired(now=0.4) == []
+    assert round(bb.next_deadline(now=0.4), 6) == round(0.1, 6)
+    [ab] = bb.expired(now=0.6)
+    assert ab.n_real == 1
+    # partial flush still pads to the STATIC (max_batch, A_pad, E_pad)
+    assert ab.batch["species"].shape == (4, 8)
+    assert ab.batch["edge_src"].shape == (4, 32)
+    assert not ab.batch["node_mask"][1:].any()   # inert pad rows
+    assert (ab.batch["edge_src"][1:] == 8).all()  # sentinel == A_pad
+    assert bb.next_deadline(now=0.7) is None
+
+
+def test_assemble_repoints_masked_edges_at_trimmed_sentinel():
+    sm = {"species": np.array([1, 2, 0, 0], np.int32),
+          "pos": np.zeros((4, 3), np.float32),
+          "edge_src": np.array([0, 1, 4, 4], np.int32),
+          "edge_dst": np.array([1, 0, 4, 4], np.int32),
+          "node_mask": np.array([True, True, False, False]),
+          "edge_mask": np.array([True, True, False, False])}
+    from repro.serve.queue import Request, _as_sample
+    canon, na, ne = _as_sample(sm)
+    req = Request(sample=canon, head=0, bucket=(8, 32), n_atoms=na,
+                  n_edges=ne, future=None, t_submit=0.0)
+    ab = assemble([req], (8, 32), 2)
+    assert (ab.batch["edge_src"][0, 2:] == 8).all()   # re-pointed to A_pad=8
+    assert (ab.batch["edge_src"][0, :2] == [0, 1]).all()
+
+
+# ---------------------------------------------------------------------------
+# checkpoint round trip
+# ---------------------------------------------------------------------------
+
+def test_from_checkpoint_serves_saved_params(served, tmp_path):
+    from repro.train import checkpoint
+    params, sources = served
+    path = str(tmp_path / "ck")
+    checkpoint.save(path, {"params": params})
+    srv = ServeSession.from_checkpoint(
+        path, CFG, n_heads=len(sources), spec=SPEC, max_wait_ms=1.0)
+    with srv, ServeSession(params, CFG, spec=SPEC,
+                           max_wait_ms=1.0) as direct:
+        sm = _sample(sources, 3, 1)
+        a = srv.submit(sm, head=3).result(timeout=30)
+        b = direct.submit(sm, head=3).result(timeout=30)
+        assert a["energy"] == b["energy"]
+        np.testing.assert_array_equal(a["forces"], b["forces"])
