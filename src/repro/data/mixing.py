@@ -126,14 +126,30 @@ class MixingBatcher:
     def _counts(self) -> np.ndarray:
         """Per-source sample counts for the next batch (sums to B, every
         count >= 0). Smooth weighted round-robin: the per-source credit
-        drift stays bounded, so cumulative counts track ``k*B*w_s``."""
+        drift stays bounded, so cumulative counts track ``k*B*w_s``. A
+        zero-weight (quarantined) source gains no credit AND is masked out
+        of the argmax — residual credit from before a ``set_weights`` call
+        must not win it one last slot."""
         counts = np.zeros(len(self.weights), np.int64)
+        live = self.weights > 0
         for _ in range(self.B):
             self.credit += self.weights
-            pick = int(np.argmax(self.credit))
+            pick = int(np.argmax(np.where(live, self.credit, -np.inf)))
             self.credit[pick] -= 1.0
             counts[pick] += 1
         return counts
+
+    def set_weights(self, weights):
+        """Replace the sampling weights in place (renormalized) — the
+        quarantine lever: zero a bad source's weight and it stops appearing
+        in batches from the NEXT draw on (already-prefetched batches may
+        still contain it). At least one source must stay positive."""
+        w = np.asarray(weights, np.float64)
+        assert w.shape == self.weights.shape, \
+            f"{w.shape} weights for {self.weights.shape} sources"
+        assert (w >= 0).all(), f"weights must be >= 0, got {w}"
+        assert w.sum() > 0, "cannot zero every source's weight"
+        self.weights = w / w.sum()
 
     def _take(self, s: int, k: int) -> np.ndarray:
         """k sample indices from source s, shuffled-cyclic."""
@@ -185,6 +201,7 @@ class MixingBatcher:
             "perm_rng": list(self._perm_rng),
             "cursor": list(self.cursor),
             "credit": self.credit.tolist(),
+            "weights": self.weights.tolist(),
         }
 
     def restore(self, state: dict):
@@ -199,3 +216,5 @@ class MixingBatcher:
             self.perm[s] = self.rngs[s].permutation(self.sizes[s])
         self.cursor = list(state["cursor"])
         self.credit = np.asarray(state["credit"], np.float64)
+        if "weights" in state:   # absent in pre-resilience snapshots
+            self.weights = np.asarray(state["weights"], np.float64)

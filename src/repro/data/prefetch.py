@@ -71,6 +71,7 @@ class Prefetcher:
             self._consumed_state = None
             self._trackable = False
         self._err: BaseException | None = None
+        self._fault: BaseException | None = None
         self._closed = False
         self._start()
 
@@ -94,6 +95,9 @@ class Prefetcher:
     def _produce(self):
         try:
             while not self._stop.is_set():
+                if self._fault is not None:
+                    exc, self._fault = self._fault, None
+                    raise exc
                 b = self.batcher.next_batch()
                 # snapshot BEFORE transform (transform is placement, not
                 # stream position) and after the draw: restoring to this
@@ -103,8 +107,26 @@ class Prefetcher:
                     b = self.transform(b)
                 self._put((b, st))
         except BaseException as e:  # propagate to the consumer
+            if isinstance(e, StopIteration):
+                # next_batch() is also __next__: re-raising a producer's
+                # bare StopIteration there would SILENTLY end any for-loop
+                # over the Prefetcher instead of surfacing the failure —
+                # wrap it, keeping the original as __cause__ (traceback
+                # included)
+                wrapped = RuntimeError(
+                    "prefetch producer raised StopIteration "
+                    "(exhausted/broken source?)")
+                wrapped.__cause__ = e
+                e = wrapped
             self._err = e
             self._put((self._DONE, None))
+
+    def inject_producer_fault(self, exc: BaseException):
+        """Chaos hook (repro.resilience.faults): the producer raises ``exc``
+        before its next draw, exactly as if it had crashed — the consumer
+        sees it from ``next_batch()`` after draining already-queued batches,
+        and ``restore(state())`` recovers the stream in place."""
+        self._fault = exc
 
     def next_batch(self):
         if self._err is not None and self._q.empty():

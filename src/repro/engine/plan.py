@@ -80,7 +80,10 @@ class ShardingPlan:
         os_ = self.opt_shardings(state.opt_state, ps)
         rng = None if state.rng is None else \
             jax.tree_util.tree_map(lambda _: rep, state.rng)
-        return TrainState(params=ps, opt_state=os_, step=rep, rng=rng)
+        guard = None if state.guard is None else \
+            jax.tree_util.tree_map(lambda _: rep, state.guard)
+        return TrainState(params=ps, opt_state=os_, step=rep, rng=rng,
+                          guard=guard)
 
     def data_batch_shardings(self, batch):
         assert self.mesh is not None

@@ -81,6 +81,12 @@ class SessionConfig:
     # each step — if run() raises mid-loop, session.state buffers are gone.
     # Set False to keep pre-run state recoverable after a failure.
     donate: bool = True
+    # fault tolerance (repro.resilience): a ResilienceConfig switches run()
+    # to the resilient runner — guarded stepping with loss-spike/NaN
+    # rollback, policy-driven preemption-safe checkpointing, retried IO and
+    # deterministic fault injection (docs/robustness.md). None = the plain
+    # train_loop, byte-for-byte legacy behaviour.
+    resilience: Any = None
 
     def replace(self, **kw) -> "SessionConfig":
         return dataclasses.replace(self, **kw)
@@ -129,6 +135,11 @@ class SessionResult:
     final_loss: float
     last_metrics: dict
     stopped_early: bool
+    # resilient runs only: the run exited early on (real or simulated)
+    # SIGTERM/SIGUSR1 after flushing a resumable checkpoint
+    preempted: bool = False
+    # resilient runs only: trip/rollback/recovery report (runner docstring)
+    resilience: dict | None = None
 
     @property
     def params(self):
@@ -245,13 +256,23 @@ class Session:
             else cfg.lr
         self.optimizer = adamw(lr, weight_decay=cfg.weight_decay,
                                grad_clip=cfg.grad_clip)
-        step = make_step(self.model, self.optimizer, self.plan,
-                         accum=cfg.accum, task_weights=task_weights)
-        self.compiled_step = self.plan.compile(step)
+        # quarantine bookkeeping (repro.resilience): loss-weight-quarantined
+        # task indices (task-major sessions) and sampling-quarantined source
+        # indices (MixingBatcher sessions)
+        self._quarantined: set[int] = set()
+        self._quarantined_sources: set[int] = set()
+        self._task_major_batches = multitask
+        self._rebuild_step()
 
         params = self.model.init(jax.random.PRNGKey(cfg.seed))
+        guard0 = None
+        if cfg.resilience is not None and \
+                getattr(cfg.resilience, "guard", None) is not None:
+            from repro.resilience.guard import GuardState
+            guard0 = GuardState.init()
         state = TrainState.create(params, self.optimizer,
-                                  rng=jax.random.PRNGKey(cfg.seed + 1))
+                                  rng=jax.random.PRNGKey(cfg.seed + 1),
+                                  guard=guard0)
         self.state = self.plan.shard_state(state)
         # ONE prefetcher for the session's lifetime (created on first run):
         # closing it between runs would discard already-drawn batches and
@@ -265,6 +286,27 @@ class Session:
     @classmethod
     def from_config(cls, cfg: SessionConfig, **kw) -> "Session":
         return cls(cfg, **kw)
+
+    def _rebuild_step(self):
+        """(Re)build + (re)compile the train step from the current model /
+        optimizer / task_weights. Guarded (repro.resilience.guard) when the
+        session carries a ResilienceConfig with a GuardConfig — the
+        accept/reject select lives INSIDE the jitted step, so guarding stays
+        donation-safe. Called at construction and after quarantine changes
+        the task weights."""
+        cfg = self.cfg
+        gcfg = getattr(cfg.resilience, "guard", None) \
+            if cfg.resilience is not None else None
+        if gcfg is not None:
+            from repro.resilience.guard import make_guarded_step
+            step = make_guarded_step(self.model, self.optimizer, self.plan,
+                                     guard=gcfg, accum=cfg.accum,
+                                     task_weights=self.task_weights)
+        else:
+            step = make_step(self.model, self.optimizer, self.plan,
+                             accum=cfg.accum,
+                             task_weights=self.task_weights)
+        self.compiled_step = self.plan.compile(step)
 
     def n_params(self) -> int:
         return sum(int(x.size) for x in
@@ -340,6 +382,81 @@ class Session:
         # stale now that the pipeline was rewound
         self._dp_snapshot = None
 
+    # -- fault tolerance (repro.resilience) ---------------------------------
+
+    def _inner_batcher(self):
+        b = self.batcher
+        return b.batcher if isinstance(b, BucketingBatcher) else b
+
+    def quarantine_tasks(self, tasks):
+        """Quarantine fidelity sources so they stop influencing the params.
+
+        Multi-head (task-major) sessions zero the per-task LOSS weight and
+        recompile the step (the resilient runner additionally sanitizes the
+        quarantined batch slices — a zero loss weight alone is not enough,
+        since 0 * nan == nan in the backward pass). MixingBatcher sessions
+        zero the source's SAMPLING weight instead — no recompile needed.
+        Idempotent; refuses to quarantine every source."""
+        tasks = sorted({int(t) for t in tasks})
+        if not tasks:
+            return
+        inner = self._inner_batcher()
+        if isinstance(inner, MixingBatcher):
+            w = np.asarray(inner.weights, np.float64).copy()
+            for t in tasks:
+                assert 0 <= t < w.size, f"source {t} out of range"
+                w[t] = 0.0
+            inner.set_weights(w)   # asserts at least one source survives
+            self._quarantined_sources |= set(tasks)
+            return
+        assert isinstance(self.model, MultiTaskModel), \
+            "quarantine_tasks needs per-task loss weights (multi-task " \
+            "model) or a MixingBatcher session"
+        if self.plan.resolved_backend == "shard_map":
+            raise ValueError(
+                "the shard_map backend supports uniform task weights only — "
+                "cannot quarantine a source; use backend='pjit'")
+        n = len(self.task_names)
+        w = np.ones(n, np.float64) if self.task_weights is None else \
+            np.asarray(self.task_weights, np.float64).copy()
+        for t in tasks:
+            assert 0 <= t < n, f"task {t} out of range for {n} tasks"
+            w[t] = 0.0
+        assert w.sum() > 0, "cannot quarantine every task"
+        self.task_weights = tuple(float(x) for x in w)
+        self._quarantined |= set(tasks)
+        self._rebuild_step()
+
+    def _reapply_quarantine(self):
+        """Rollback restores a datapipe snapshot that may predate a
+        sampling quarantine — restoring it would resurrect the quarantined
+        source's weight, so re-zero it. The loss-weight path lives in the
+        compiled step and survives rollback untouched."""
+        if not self._quarantined_sources:
+            return
+        inner = self._inner_batcher()
+        w = np.asarray(inner.weights, np.float64).copy()
+        w[sorted(self._quarantined_sources)] = 0.0
+        inner.set_weights(w)
+
+    def resume(self, ckpt_dir: str | None = None) -> int:
+        """Rewind this session to the latest checkpoint a resilient run
+        wrote (full TrainState — params, optimizer moments, step, rng,
+        guard — AND the datapipe position): the next ``run()`` continues
+        from there to ``cfg.steps``, replaying the batch stream
+        byte-identically. Returns the resumed step."""
+        d = ckpt_dir if ckpt_dir is not None else \
+            getattr(self.cfg.resilience, "ckpt_dir", None)
+        assert d, "resume() needs cfg.resilience.ckpt_dir or an explicit dir"
+        from repro.resilience.policy import CheckpointManager
+        mgr = CheckpointManager(
+            d, getattr(self.cfg.resilience, "policy", None))
+        path, state = mgr.load_latest(template=self.state)
+        self.state = state
+        if checkpoint.has_datapipe(path):
+            self.restore_datapipe(path)
+        return int(state.step)
+
     def _metric_fn(self, out) -> dict:
         m = out.metrics
         extras = {}
@@ -349,23 +466,30 @@ class Session:
                            for t in range(pt.shape[0])})
         return extras
 
+    def _batches(self):
+        """The batch-drawing callable run() loops over. Device placement
+        runs with the batcher: on the prefetch thread it overlaps the
+        running step (async input pipeline), synchronously it is simply the
+        old ``shard_batch(next_batch())`` critical path."""
+        place = self.plan.shard_batch
+        if self.cfg.prefetch:
+            if self._prefetcher is None:
+                from repro.data.prefetch import Prefetcher
+                self._prefetcher = Prefetcher(
+                    self.batcher, transform=place,
+                    depth=self.cfg.prefetch_depth)
+            return self._prefetcher.next_batch
+        return lambda: place(self.batcher.next_batch())
+
     def run(self) -> SessionResult:
+        if self.cfg.resilience is not None:
+            from repro.resilience.runner import run_resilient
+            return run_resilient(self)
         cfg = self.cfg
         early = EarlyStopping(patience=cfg.patience,
                               min_delta=cfg.min_delta) \
             if cfg.patience > 0 else None
-        # device placement runs with the batcher: on the prefetch thread it
-        # overlaps the running step (async input pipeline), synchronously it
-        # is simply the old ``shard_batch(next_batch())`` critical path
-        place = self.plan.shard_batch
-        if cfg.prefetch:
-            if self._prefetcher is None:
-                from repro.data.prefetch import Prefetcher
-                self._prefetcher = Prefetcher(self.batcher, transform=place,
-                                              depth=cfg.prefetch_depth)
-            batches = self._prefetcher.next_batch
-        else:
-            batches = lambda: place(self.batcher.next_batch())  # noqa: E731
+        batches = self._batches()
         state, logger, last_out = train_loop(
             self.compiled_step, self.state, batches,
             steps=cfg.steps, eval_fn=self.eval_fn,

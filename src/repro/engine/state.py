@@ -21,12 +21,18 @@ class TrainState(NamedTuple):
     opt_state: Any
     step: jnp.ndarray          # () int32
     rng: Any = None            # optional PRNG key, threaded through steps
+    # guarded stepping (repro.resilience): a GuardState pytree of scalars
+    # (loss EMA + trip counters) threaded through the jitted step so the
+    # guard's skip-the-update select lives INSIDE the compiled step and
+    # survives buffer donation. None for unguarded sessions — plain steps
+    # drop it and every existing construction keeps working.
+    guard: Any = None
 
     @classmethod
-    def create(cls, params, optimizer, rng=None) -> "TrainState":
+    def create(cls, params, optimizer, rng=None, guard=None) -> "TrainState":
         """Initialise from params + an ``Optimizer`` (repro.optim)."""
         return cls(params=params, opt_state=optimizer.init(params),
-                   step=jnp.zeros((), jnp.int32), rng=rng)
+                   step=jnp.zeros((), jnp.int32), rng=rng, guard=guard)
 
 
 class StepOutput(NamedTuple):

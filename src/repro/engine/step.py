@@ -66,7 +66,11 @@ def multitask_grad_fn(model: MultiTaskModel, n_tasks: int,
     def grad_fn(params, batch):
         def loss(p):
             per_task, metrics = model.loss_fn(p["shared"], p["heads"], batch)
-            return jnp.sum(per_task * tw), (per_task, metrics)
+            # zero-weight (quarantined) tasks are excluded by select, not by
+            # multiplication: 0 * non-finite is still non-finite, so a
+            # quarantined source's NaN loss would otherwise poison the total
+            return jnp.sum(jnp.where(tw > 0, per_task * tw, 0.0)), \
+                (per_task, metrics)
 
         (l, (per_task, metrics)), grads = \
             jax.value_and_grad(loss, has_aux=True)(params)

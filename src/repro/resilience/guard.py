@@ -1,0 +1,221 @@
+"""Guarded stepping: loss/grad finiteness + EMA spike checks, in-step.
+
+At 24M+-structure multi-fidelity scale the occasional poisoned batch — a
+corrupt record, an outlier geometry, a fidelity source whose labels go bad —
+is routine, and one NaN gradient is enough to destroy a parameter tree
+forever. The guard makes every optimizer update conditional:
+
+    ok = isfinite(loss) & isfinite(|grads|) & (loss <= spike_factor * EMA)
+
+The select lives INSIDE the jitted step (``make_guarded_step``), so it is
+donation-safe: a tripped step returns the incoming state unchanged (params,
+optimizer moments, step counter and all) without any host round-trip of the
+parameter tree. The EMA, warmup counter and consecutive-trip counter travel
+in ``TrainState.guard`` (a ``GuardState`` of scalars), so they are part of
+every checkpoint and every rollback for free.
+
+``StepGuard`` is the host-side half: it reads the one ``guard_ok`` scalar
+per step (the only forced sync the guard adds), counts consecutive trips to
+decide when the runner should roll back to the last good checkpoint, and
+attributes trips to fidelity sources (via the non-finite / spiking entries
+of ``per_task_loss``) so a persistently bad source can be quarantined —
+its loss weight zeroed and its batch slice sanitized — instead of killing
+the run. See ``repro.resilience.runner`` for the loop that acts on it and
+docs/robustness.md for the lifecycle.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.taskpar import MultiTaskModel
+from repro.engine.state import StepOutput, TrainState
+from repro.engine.step import make_grad_fn, with_grad_accum
+from repro.optim.adamw import global_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardConfig:
+    """Knobs for guarded stepping (docs/robustness.md has the full table).
+
+    spike_factor: trip when ``loss > spike_factor * |EMA| + spike_slack``
+        (only after ``warmup_steps`` accepted steps have seeded the EMA).
+    ema_decay: EMA smoothing of the accepted-step loss. Tripped losses never
+        enter the EMA, so one spike cannot drag the threshold up after it.
+    warmup_steps: accepted steps before the spike check arms (finiteness is
+        always checked, from step one).
+    max_consecutive_trips: consecutive tripped steps before the runner rolls
+        params + optimizer + datapipe back to the last good checkpoint.
+    quarantine_after: per-source attributed trips before the runner zeroes
+        that source's loss weight (0 = never quarantine).
+    """
+    spike_factor: float = 4.0
+    spike_slack: float = 0.0
+    ema_decay: float = 0.98
+    warmup_steps: int = 10
+    max_consecutive_trips: int = 3
+    quarantine_after: int = 0
+
+
+class GuardState(NamedTuple):
+    """Device-resident guard scalars, threaded through ``TrainState.guard``:
+    they ride every checkpoint/rollback with the params."""
+    ema: jnp.ndarray     # () f32 — EMA of ACCEPTED losses
+    good: jnp.ndarray    # () i32 — accepted steps seen (arms the spike check)
+    trips: jnp.ndarray   # () i32 — consecutive tripped steps
+
+    @classmethod
+    def init(cls) -> "GuardState":
+        return cls(ema=jnp.zeros((), jnp.float32),
+                   good=jnp.zeros((), jnp.int32),
+                   trips=jnp.zeros((), jnp.int32))
+
+
+def make_guarded_train_step(grad_fn, optimizer, gcfg: GuardConfig):
+    """Wrap a grad_fn + optimizer into a guarded TrainStep.
+
+    Same signature as ``make_train_step``'s result, but the state must carry
+    a ``GuardState`` (``TrainState.guard``) and a tripped step returns the
+    incoming state unchanged — params, moments AND step counter (the runner
+    advances by ``state.step``, so a skipped update is retried against the
+    next batch, not silently dropped from the schedule)."""
+
+    def step(state: TrainState, batch):
+        g = state.guard
+        loss, metrics, grads = grad_fn(state.params, batch)
+        gnorm = global_norm(grads)
+        # one non-finite anywhere in the grads makes the global norm
+        # non-finite (inf/nan propagate through square+sum), so two scalar
+        # checks cover the whole tree
+        finite = jnp.isfinite(loss) & jnp.isfinite(gnorm)
+        warm = g.good >= gcfg.warmup_steps
+        threshold = jnp.where(
+            warm, gcfg.spike_factor * jnp.abs(g.ema) + gcfg.spike_slack,
+            jnp.inf).astype(jnp.float32)
+        ok = finite & (loss <= threshold)
+
+        new_params, new_opt = optimizer.update(grads, state.opt_state,
+                                               state.params)
+        sel = lambda new, old: jnp.where(ok, new, old)  # noqa: E731
+        params = jax.tree_util.tree_map(sel, new_params, state.params)
+        opt = jax.tree_util.tree_map(sel, new_opt, state.opt_state)
+        # tripped losses never update the EMA; the first accepted loss
+        # seeds it outright (no zero-bias from the init value)
+        ema = jnp.where(
+            ok, jnp.where(g.good > 0,
+                          gcfg.ema_decay * g.ema +
+                          (1.0 - gcfg.ema_decay) * loss.astype(jnp.float32),
+                          loss.astype(jnp.float32)),
+            g.ema)
+        oki = ok.astype(jnp.int32)
+        guard = GuardState(ema=ema, good=g.good + oki,
+                           trips=jnp.where(ok, 0, g.trips + 1))
+        new_state = TrainState(params=params, opt_state=opt,
+                               step=state.step + oki, rng=state.rng,
+                               guard=guard)
+        metrics = dict(metrics, guard_ok=ok.astype(jnp.float32),
+                       guard_trips=guard.trips.astype(jnp.float32),
+                       guard_gnorm=gnorm, guard_threshold=threshold)
+        return new_state, StepOutput(loss=loss, metrics=metrics)
+
+    return step
+
+
+def make_guarded_step(model, optimizer, plan=None, *, guard: GuardConfig,
+                      accum: int = 1, task_weights=None):
+    """``repro.engine.make_step`` with the guard threaded in: one call from
+    model + optimizer (+ plan) to an uncompiled guarded TrainStep."""
+    grad_fn = make_grad_fn(model, plan, task_weights=task_weights)
+    axis = 1 if isinstance(model, MultiTaskModel) else 0
+    grad_fn = with_grad_accum(grad_fn, accum, axis=axis)
+    return make_guarded_train_step(grad_fn, optimizer, guard)
+
+
+class StepGuard:
+    """Host-side guard bookkeeping over a guarded step's metrics.
+
+    ``observe(out)`` syncs exactly one scalar (``guard_ok``) per step; on a
+    trip it additionally pulls ``per_task_loss`` to attribute the trip to a
+    fidelity source: non-finite entries are charged directly, a finite
+    spike is charged to the per-task-loss argmax. ``should_rollback()`` and
+    ``quarantine_candidates()`` are the two decisions the resilient runner
+    acts on."""
+
+    def __init__(self, cfg: GuardConfig, n_sources: int = 0):
+        self.cfg = cfg
+        self.consecutive = 0
+        self.trips_total = 0
+        self.rollbacks = 0
+        self.source_trips = np.zeros(max(n_sources, 0), np.int64)
+        self.quarantined: set[int] = set()
+
+    def observe(self, out: StepOutput) -> bool:
+        """True if the step was accepted. Counts trips and attributes them
+        to sources when ``per_task_loss`` is available."""
+        m = out.metrics
+        ok = bool(np.asarray(m["guard_ok"]))
+        if ok:
+            self.consecutive = 0
+            return True
+        self.consecutive += 1
+        self.trips_total += 1
+        pt = m.get("per_task_loss")
+        if pt is not None and self.source_trips.size:
+            pt = np.asarray(pt, np.float64)
+            bad = ~np.isfinite(pt)
+            if bad.any():
+                self.source_trips[bad] += 1
+            else:  # finite spike: charge the loudest source
+                self.source_trips[int(np.argmax(pt))] += 1
+        return False
+
+    def should_rollback(self) -> bool:
+        return self.consecutive >= self.cfg.max_consecutive_trips
+
+    def on_rollback(self):
+        """Rollback restored the last good state: the consecutive streak is
+        over (per-source attribution is cumulative — it survives, so a
+        persistently bad source still reaches quarantine through repeated
+        rollback cycles)."""
+        self.consecutive = 0
+        self.rollbacks += 1
+
+    def quarantine_candidates(self) -> list[int]:
+        """Sources whose attributed trips crossed ``quarantine_after`` and
+        that are not already quarantined (empty when the knob is off)."""
+        if self.cfg.quarantine_after <= 0:
+            return []
+        hot = np.nonzero(self.source_trips >= self.cfg.quarantine_after)[0]
+        return [int(s) for s in hot if int(s) not in self.quarantined]
+
+    def mark_quarantined(self, sources):
+        self.quarantined |= {int(s) for s in sources}
+
+    def report(self) -> dict:
+        return {"trips": self.trips_total, "rollbacks": self.rollbacks,
+                "source_trips": self.source_trips.tolist(),
+                "quarantined": sorted(self.quarantined)}
+
+
+def zero_task_slices(batch, tasks) -> Any:
+    """Sanitize a task-major batch: overwrite the given task slices with
+    inert zeros (floats -> 0.0, ints -> 0, masks -> False). Zeroing the
+    LOSS weight of a quarantined source is not enough on its own: a zero
+    cotangent back-propagated through non-finite activations is still
+    non-finite (0 * nan == nan), so the poisoned rows must never enter the
+    forward at all."""
+    tasks = sorted(int(t) for t in tasks)
+    if not tasks:
+        return batch
+
+    def scrub(x):
+        x = jnp.asarray(x)
+        for t in tasks:
+            x = x.at[t].set(jnp.zeros((), x.dtype))
+        return x
+
+    return jax.tree_util.tree_map(scrub, batch)

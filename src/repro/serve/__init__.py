@@ -15,9 +15,15 @@ cache whose recompile budget is the bucket grid. See docs/serving.md.
 from .batching import AssembledBatch, SizeBinnedBatcher, assemble
 from .engine import ServeSession
 from .metrics import Reservoir, ServeMetrics
-from .queue import Request, RequestQueue
+from .queue import (
+    DeadlineExceededError,
+    Request,
+    RequestQueue,
+    ServeClosedError,
+)
 
 __all__ = [
-    "AssembledBatch", "Request", "RequestQueue", "Reservoir",
-    "ServeMetrics", "ServeSession", "SizeBinnedBatcher", "assemble",
+    "AssembledBatch", "DeadlineExceededError", "Request", "RequestQueue",
+    "Reservoir", "ServeClosedError", "ServeMetrics", "ServeSession",
+    "SizeBinnedBatcher", "assemble",
 ]

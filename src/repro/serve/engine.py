@@ -42,7 +42,7 @@ from repro.models import gnn, heads as heads_mod
 
 from .batching import AssembledBatch, SizeBinnedBatcher
 from .metrics import ServeMetrics
-from .queue import RequestQueue
+from .queue import DeadlineExceededError, RequestQueue, ServeClosedError
 
 # head-parameter keys that are training-only (loss weighting), never part
 # of the serving forward
@@ -69,11 +69,21 @@ class ServeSession:
     max_batch:    rows per compiled batch (static leading dim).
     max_wait_ms:  partial-batch flush deadline (tail-latency bound).
     queue_depth:  admission backpressure bound.
+    max_queue_wait_ms: per-request queue-wait budget — a request that aged
+        past it is SHED (its future fails with ``DeadlineExceededError``)
+        instead of computed, so overload degrades by dropping stale work
+        rather than serving every request late. None = never shed.
+    admission_timeout_ms: bound on how long ``submit()`` blocks on
+        backpressure before raising ``DeadlineExceededError`` in the
+        caller's thread. None = block until a slot frees.
     """
 
     def __init__(self, params: dict, arch, *, spec: BucketSpec | None = None,
                  max_batch: int = 8, max_wait_ms: float = 5.0,
-                 queue_depth: int = 256, metrics: ServeMetrics | None = None,
+                 queue_depth: int = 256,
+                 max_queue_wait_ms: float | None = None,
+                 admission_timeout_ms: float | None = None,
+                 metrics: ServeMetrics | None = None,
                  clock=time.monotonic, seed: int = 0):
         if not (isinstance(params, dict) and
                 {"shared", "heads"} <= set(params)):
@@ -98,10 +108,16 @@ class ServeSession:
         self._heads = _head_slices(params["heads"], n_heads)
         self.metrics = metrics if metrics is not None else \
             ServeMetrics(seed=seed)
-        self.queue = RequestQueue(spec, depth=queue_depth, n_heads=n_heads,
-                                  clock=clock, metrics=self.metrics)
+        # retained so restart_worker() can rebuild the queue/batcher pair
+        self._queue_depth = queue_depth
+        self._max_queue_wait = None if max_queue_wait_ms is None \
+            else max_queue_wait_ms * 1e-3
+        self._admission_timeout = None if admission_timeout_ms is None \
+            else admission_timeout_ms * 1e-3
+        self._max_wait = max_wait_ms * 1e-3
+        self.queue = self._make_queue()
         self.batcher = SizeBinnedBatcher(max_batch=max_batch,
-                                         max_wait=max_wait_ms * 1e-3)
+                                         max_wait=self._max_wait)
 
         def forward(shared, head, batch):
             feats = gnn.egnn_apply(shared, batch, cfg=arch)
@@ -116,10 +132,21 @@ class ServeSession:
         self._shapes_compiled: set = set()
         self._closed = False
         self._worker_error: BaseException | None = None
+        # requests dequeued but not yet filed into the batcher: on a worker
+        # crash these are in NEITHER the queue nor the batcher, so the
+        # fail-fast handler must fail their futures from here
+        self._inflight: list = []
         self._closing = threading.Event()
         self._worker = threading.Thread(target=self._serve_loop,
                                         name="serve-worker", daemon=True)
         self._worker.start()
+
+    def _make_queue(self) -> RequestQueue:
+        return RequestQueue(self.spec, depth=self._queue_depth,
+                            n_heads=self.n_heads, clock=self._clock,
+                            metrics=self.metrics,
+                            max_queue_wait=self._max_queue_wait,
+                            admission_timeout=self._admission_timeout)
 
     # -- construction helpers -----------------------------------------------
 
@@ -222,9 +249,11 @@ class ServeSession:
 
     def _check_alive(self):
         if self._closed:
-            raise RuntimeError("ServeSession is closed")
+            raise ServeClosedError("ServeSession is closed")
         if self._worker_error is not None:
-            raise RuntimeError("serve worker died") from self._worker_error
+            raise ServeClosedError(
+                "serve worker died — session is closed to new work "
+                "(restart_worker() recovers it)") from self._worker_error
 
     def _executable(self, bucket: tuple, head: int):
         """The per-(bucket, head) cache entry: the shared jitted forward
@@ -272,6 +301,14 @@ class ServeSession:
     def _file(self, req) -> AssembledBatch | None:
         req.t_dequeue = self._clock()
         self.metrics.observe("queue_wait", req.t_dequeue - req.t_submit)
+        if req.deadline is not None and req.t_dequeue > req.deadline:
+            # stale request: under overload, computing it would only delay
+            # every request behind it — shed instead (load shedding)
+            req.future.set_exception(DeadlineExceededError(
+                f"request waited {req.t_dequeue - req.t_submit:.3f}s in "
+                f"queue, past its max_queue_wait deadline"))
+            self.metrics.inc("shed_deadline")
+            return None
         t0 = self._clock()
         ab = self.batcher.add(req)
         if ab is not None:
@@ -294,8 +331,13 @@ class ServeSession:
                     # their deadline (they aged in the queue), so filing one
                     # at a time would flush every bin one-deep; filing the
                     # backlog first lets bins reach max_batch occupancy.
-                    ready = [ab for r in [req] + self.queue.drain()
-                             if (ab := self._file(r)) is not None]
+                    self._inflight = [req] + self.queue.drain()
+                    ready = []
+                    while self._inflight:
+                        ab = self._file(self._inflight[0])
+                        self._inflight.pop(0)
+                        if ab is not None:
+                            ready.append(ab)
                     for ab in ready:
                         self._execute(ab)
                 t0 = self._clock()
@@ -315,7 +357,38 @@ class ServeSession:
                 self._execute(ab)
         except BaseException as err:   # fail loudly, never hang futures
             self._worker_error = err
-            pending = self.queue.drain() + self.batcher.pending_requests()
+            # close admissions FIRST: a submit racing the drain below would
+            # otherwise enqueue a request nobody will ever serve
+            self.queue.close()
+            self.metrics.inc("worker_failures")
+            pending = (self._inflight + self.queue.drain() +
+                       self.batcher.pending_requests())
+            self._inflight = []
             for req in pending:
                 req.future.set_exception(err)
             self.metrics.inc("failed", len(pending))
+
+    # -- recovery -------------------------------------------------------------
+
+    def restart_worker(self) -> bool:
+        """Recover from a dead worker: clear the fail-fast state and stand
+        up a fresh queue + batcher + worker thread. Compiled executables are
+        retained, so recovery costs no recompilation. The crashed worker's
+        pending futures were already failed — nothing is replayed. Returns
+        True if a restart happened (False: worker was healthy)."""
+        if self._closed:
+            raise ServeClosedError("ServeSession is closed")
+        if self._worker_error is None and self._worker.is_alive():
+            return False
+        self._worker.join(timeout=5.0)
+        self._worker_error = None
+        self._inflight = []
+        self.queue = self._make_queue()
+        self.batcher = SizeBinnedBatcher(max_batch=self.max_batch,
+                                         max_wait=self._max_wait)
+        self._closing = threading.Event()
+        self._worker = threading.Thread(target=self._serve_loop,
+                                        name="serve-worker", daemon=True)
+        self._worker.start()
+        self.metrics.inc("worker_restarts")
+        return True

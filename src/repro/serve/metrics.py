@@ -72,6 +72,11 @@ class ServeMetrics:
 
     Counter vocabulary (all monotonic):
       submitted / completed / failed / rejected — request outcomes
+      shed_admission / shed_deadline            — load shedding (no queue
+                                                  slot in time / aged past
+                                                  the queue-wait budget)
+      worker_failures / worker_restarts         — engine-worker crashes and
+                                                  restart_worker() recoveries
       batches                                   — compiled executions run
       batch_slots / batch_real                  — padded vs occupied rows
       compilations                              — distinct compiled shapes
@@ -83,6 +88,8 @@ class ServeMetrics:
         self._lock = threading.Lock()
         self.counters: dict[str, int] = {
             k: 0 for k in ("submitted", "completed", "failed", "rejected",
+                           "shed_admission", "shed_deadline",
+                           "worker_failures", "worker_restarts",
                            "batches", "batch_slots", "batch_real",
                            "compilations")}
         # one seed per stage, derived deterministically from the base seed

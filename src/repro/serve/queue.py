@@ -32,6 +32,19 @@ SAMPLE_KEYS = ("species", "pos", "edge_src", "edge_dst",
                "node_mask", "edge_mask")
 
 
+class ServeClosedError(RuntimeError):
+    """The queue/session is closed (shutdown, or the worker died). A
+    RuntimeError whose message contains "closed", so callers matching the
+    historical ``RuntimeError`` contract keep working."""
+
+
+class DeadlineExceededError(RuntimeError):
+    """The request's latency budget expired: either ``submit()`` could not
+    find a queue slot within ``admission_timeout`` (raised in the caller's
+    thread), or the request aged past ``max_queue_wait`` in the queue and
+    the worker shed it (set on the request's future)."""
+
+
 @dataclasses.dataclass
 class Request:
     """One admitted property-prediction request.
@@ -50,6 +63,9 @@ class Request:
     t_submit: float
     t_dequeue: float = 0.0
     t_done: float = 0.0
+    # engine-clock instant after which the worker sheds this request
+    # instead of computing it (None = no deadline)
+    deadline: float | None = None
 
 
 def _as_sample(sample: dict) -> tuple[dict, int, int]:
@@ -102,12 +118,22 @@ class RequestQueue:
     the engine can drain them."""
 
     def __init__(self, spec: BucketSpec, *, depth: int = 256,
-                 n_heads: int = 1, clock=time.monotonic, metrics=None):
+                 n_heads: int = 1, clock=time.monotonic, metrics=None,
+                 max_queue_wait: float | None = None,
+                 admission_timeout: float | None = None):
         assert depth >= 1, f"queue depth must be >= 1, got {depth}"
+        assert max_queue_wait is None or max_queue_wait > 0
+        assert admission_timeout is None or admission_timeout > 0
         self.spec = spec
         self.n_heads = n_heads
         self._clock = clock
         self._metrics = metrics
+        # per-request queue-wait budget (seconds): the worker sheds requests
+        # that aged past it instead of computing stale answers under overload
+        self.max_queue_wait = max_queue_wait
+        # submit-side budget (seconds): bound how long a caller blocks on
+        # backpressure before shedding in ITS thread
+        self.admission_timeout = admission_timeout
         self._q: queue.Queue = queue.Queue(maxsize=depth)
         self._closed = threading.Event()
 
@@ -116,10 +142,12 @@ class RequestQueue:
         resolving to ``{"energy": float, "forces": (n_atoms, 3)}``.
 
         Raises ``BucketOverflowError`` (oversized structure), ``ValueError``
-        (malformed sample / unknown head) or ``RuntimeError`` (queue closed)
-        — all in the caller's thread, before any queue slot is taken."""
+        (malformed sample / unknown head), ``ServeClosedError`` (queue
+        closed) or ``DeadlineExceededError`` (no slot freed within
+        ``admission_timeout``) — all in the caller's thread, before any
+        queue slot is taken."""
         if self._closed.is_set():
-            raise RuntimeError("RequestQueue is closed")
+            raise ServeClosedError("RequestQueue is closed")
         try:
             if not 0 <= head < self.n_heads:
                 raise ValueError(f"head {head} out of range "
@@ -130,13 +158,23 @@ class RequestQueue:
             if self._metrics is not None:
                 self._metrics.inc("rejected")
             raise
+        t_submit = self._clock()
         req = Request(sample=canon, head=head, bucket=bucket,
                       n_atoms=n_atoms, n_edges=n_edges, future=Future(),
-                      t_submit=self._clock())
+                      t_submit=t_submit,
+                      deadline=None if self.max_queue_wait is None
+                      else t_submit + self.max_queue_wait)
         while True:
             if self._closed.is_set():
-                raise RuntimeError("RequestQueue closed while waiting "
-                                   "for a free slot")
+                raise ServeClosedError("RequestQueue closed while waiting "
+                                       "for a free slot")
+            if self.admission_timeout is not None and \
+                    self._clock() - t_submit > self.admission_timeout:
+                if self._metrics is not None:
+                    self._metrics.inc("shed_admission")
+                raise DeadlineExceededError(
+                    f"no queue slot freed within admission_timeout="
+                    f"{self.admission_timeout}s — server is saturated")
             try:
                 self._q.put(req, timeout=0.05)
                 break

@@ -47,7 +47,10 @@ def _flatten(tree, prefix=""):
     elif isinstance(tree, (tuple, list)):
         for i, v in enumerate(tree):
             out.update(_flatten(v, f"{prefix}__{i}/"))
-    else:
+    elif tree is not None:
+        # None leaves (e.g. TrainState.rng/guard when unused) are dropped:
+        # npz cannot hold them without object-array pickling, and
+        # _unflatten_like restores them from the template
         out[prefix[:-1]] = tree
     return out
 
@@ -76,7 +79,27 @@ def save(path: str, tree: Any, metadata: dict | None = None,
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     flat = _flatten(tree)
     arrs = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
-    np.savez(_npz_path(path), **arrs)
+    # same-directory temp + os.replace, like the JSON sidecars: a writer
+    # killed mid-write (preemption, OOM kill) leaves the previous .npz (or
+    # none) on disk, never a truncated archive that would fail to restore.
+    # np.savez is handed an OPEN file object — with a string path it would
+    # append ".npz" to the temp name and os.replace would miss it.
+    npz = _npz_path(path)
+    tmp = npz + ".tmp"
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, **arrs)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, npz)
+    except BaseException:
+        # a hard kill can't reach this, but exception paths (full disk,
+        # injected IO faults under retry) shouldn't litter the directory
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
     if metadata is not None:
         _write_json_atomic(_meta_path(path), metadata, indent=2)
     if datapipe is not None:
@@ -89,7 +112,7 @@ def restore(path: str, template: Any) -> Any:
     """template: a pytree of arrays OR ShapeDtypeStructs (possibly with
     .sharding) with the target structure."""
     data = np.load(_npz_path(path))
-    flat_t = _flatten(template)
+    flat_t = _flatten(template)   # None template leaves restore as None
 
     def put(k, t):
         arr = jnp.asarray(data[k], dtype=t.dtype)
@@ -112,6 +135,8 @@ def _unflatten_like(tree, flat, prefix):
     if isinstance(tree, (tuple, list)):
         vals = [_unflatten_like(v, flat, f"{prefix}__{i}/") for i, v in enumerate(tree)]
         return type(tree)(vals) if isinstance(tree, list) else tuple(vals)
+    if tree is None:   # dropped by _flatten on save — stays None
+        return None
     return flat[prefix[:-1]]
 
 

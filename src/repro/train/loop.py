@@ -77,7 +77,7 @@ def train_loop(step_fn, state, batches, *, steps: int, eval_fn=None,
                early_stop: EarlyStopping | None = None,
                logger: MetricLogger | None = None,
                val_metric: str = "val_loss", metric_fn=None,
-               verbose: bool = False):
+               should_stop=None, verbose: bool = False):
     """Run a unified TrainStep for ``steps`` iterations.
 
     step_fn: ``step(state, batch) -> (state, StepOutput)`` (compiled via
@@ -88,6 +88,9 @@ def train_loop(step_fn, state, batches, *, steps: int, eval_fn=None,
     validation), otherwise it falls back to the training loss.
     metric_fn: ``metric_fn(out: StepOutput) -> dict`` of extra scalars to
     log (e.g. named per-task losses).
+    should_stop: zero-arg cooperative stop hook polled before every step —
+    return True to end the loop cleanly with the state as-is (e.g. a
+    ``repro.resilience.PreemptionHandler``'s ``triggered``).
 
     Returns (state, logger, last StepOutput).
     """
@@ -95,6 +98,8 @@ def train_loop(step_fn, state, batches, *, steps: int, eval_fn=None,
     log_every = log_every or eval_every
     out = None
     for i in range(steps):
+        if should_stop is not None and should_stop():
+            break
         batch = batches() if callable(batches) else next(batches)
         state, out = step_fn(state, batch)
         is_eval = (i + 1) % eval_every == 0 or i == 0 or i == steps - 1

@@ -62,6 +62,113 @@ def test_producer_exception_propagates_and_does_not_hang():
         pf.close()
 
 
+def test_producer_stop_iteration_is_wrapped_not_swallowed():
+    """Regression (ISSUE-7): next_batch() doubles as __next__, so a bare
+    StopIteration from a broken/exhausted source would SILENTLY end any
+    for-loop over the Prefetcher. It must surface as a RuntimeError with
+    the original StopIteration preserved as __cause__."""
+    class Exhausted:
+        def __init__(self):
+            self.n = 0
+
+        def next_batch(self):
+            self.n += 1
+            if self.n > 2:
+                raise StopIteration("source ran dry")
+            return {"x": np.arange(self.n)}
+
+    pf = Prefetcher(Exhausted(), depth=1)
+    try:
+        with pytest.raises(RuntimeError,
+                           match="StopIteration") as ei:
+            for _ in range(10):
+                pf.next_batch()
+        assert isinstance(ei.value.__cause__, StopIteration)
+        # a for-loop over the prefetcher must ALSO blow up, not end cleanly
+        pf2 = Prefetcher(Exhausted(), depth=1)
+        try:
+            with pytest.raises(RuntimeError, match="StopIteration"):
+                for _ in pf2:
+                    pass
+        finally:
+            pf2.close()
+    finally:
+        pf.close()
+
+
+def test_injected_producer_fault_surfaces_after_queued_batches_drain():
+    """The chaos hook: inject_producer_fault kills the producer before its
+    NEXT draw; batches it already queued are still handed out first (the
+    consumer observes the fault at a later position than the injection —
+    exactly like a real producer crash with read-ahead in flight)."""
+    from repro.data.prefetch import Prefetcher as PF
+
+    class Killed(RuntimeError):
+        pass
+
+    pf = PF(GroupBatcher(_sources([10, 7]), 4, seed=3), depth=2)
+    try:
+        got = [pf.next_batch()]
+        pf.inject_producer_fault(Killed("producer shot"))
+        with pytest.raises(Killed):
+            for _ in range(10):
+                got.append(pf.next_batch())
+        assert len(got) >= 1
+        # recovery in place: rewind to the consumed position and the stream
+        # continues byte-identically vs a synchronous reference
+        pf.restore(pf.state())
+        ref = GroupBatcher(_sources([10, 7]), 4, seed=3)
+        for _ in range(len(got)):
+            ref.next_batch()                   # skip what was consumed
+        for _ in range(4):
+            a, b = ref.next_batch(), pf.next_batch()
+            for k in a:
+                np.testing.assert_array_equal(a[k], b[k])
+        # a second injected fault after recovery propagates again
+        pf.inject_producer_fault(Killed("again"))
+        with pytest.raises(Killed):
+            for _ in range(10):
+                pf.next_batch()
+    finally:
+        pf.close()
+
+
+def test_restore_then_stop_iteration_still_wrapped():
+    """The restore-then-crash path (ISSUE-7 satellite): restore() re-arms
+    the producer through the same wrapping logic, so a source that runs
+    dry AFTER a restore must still surface a RuntimeError with the
+    original StopIteration (and its traceback) as __cause__ on the next
+    __next__ — never a bare StopIteration that would end a for-loop."""
+    class DryingTrackable:
+        def __init__(self):
+            self.n = 0
+
+        def next_batch(self):
+            self.n += 1
+            if self.n > 2:
+                raise StopIteration("dry")
+            return {"x": np.arange(self.n)}
+
+        def state(self):
+            return {"n": self.n}
+
+        def restore(self, st):
+            self.n = st["n"]
+
+    pf = Prefetcher(DryingTrackable(), depth=1)
+    try:
+        got = [pf.next_batch()]
+        pf.restore(pf.state())         # rewind to the consumed position
+        with pytest.raises(RuntimeError, match="StopIteration") as ei:
+            for b in pf:               # __next__, the dangerous path
+                got.append(b)
+        assert isinstance(ei.value.__cause__, StopIteration)
+        assert ei.value.__cause__.__traceback__ is not None
+        assert len(got) == 2           # batch 2 replayed after the rewind
+    finally:
+        pf.close()
+
+
 def test_close_is_idempotent_and_next_batch_after_close_raises():
     pf = Prefetcher(SingleBatcher({"x": np.arange(8)}, 2, seed=0))
     pf.next_batch()

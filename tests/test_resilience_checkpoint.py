@@ -1,0 +1,200 @@
+"""Preemption-safe checkpointing: atomic .npz publishing, CheckpointManager
+retention + retried IO, PreemptionHandler signal plumbing, and the
+None-leaf TrainState roundtrip the resilient runner depends on."""
+import json
+import os
+import signal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.engine import TrainState
+from repro.optim import adamw
+from repro.resilience import (
+    CheckpointManager,
+    CheckpointPolicy,
+    CheckpointWriteError,
+    GuardState,
+    PreemptionHandler,
+    RetryError,
+)
+from repro.train import checkpoint
+from repro.train.loop import train_loop
+
+
+def _state(seed=0, guard=False):
+    opt = adamw(1e-3)
+    params = {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3) + seed,
+              "b": jnp.ones((3,), jnp.float32) * seed}
+    return TrainState.create(params, opt,
+                             guard=GuardState.init() if guard else None)
+
+
+def _tree_equal(a, b) -> bool:
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree_util.tree_leaves(a),
+                               jax.tree_util.tree_leaves(b)))
+
+
+# ---------------------------------------------------------------------------
+# atomic npz write (ISSUE-7 satellite: train/checkpoint.py)
+# ---------------------------------------------------------------------------
+
+def test_npz_write_is_atomic_under_kill_mid_write(tmp_path, monkeypatch):
+    """A writer killed mid-.npz-write must leave the PREVIOUS checkpoint
+    intact and loadable — tmp + os.replace, like the JSON sidecars."""
+    path = str(tmp_path / "ck")
+    tree = {"w": np.arange(4.0, dtype=np.float32)}
+    checkpoint.save(path, tree, metadata={"step": 1})
+
+    real_savez = np.savez
+
+    def dying_savez(f, **arrs):
+        f.write(b"PK\x03\x04 truncated")   # partial bytes, then the "kill"
+        raise KeyboardInterrupt("simulated SIGKILL mid-write")
+
+    monkeypatch.setattr(np, "savez", dying_savez)
+    with pytest.raises(KeyboardInterrupt):
+        checkpoint.save(path, {"w": np.full(4, 9.0, np.float32)},
+                        metadata={"step": 2})
+    monkeypatch.setattr(np, "savez", real_savez)
+
+    restored = checkpoint.restore(path, {"w": np.zeros(4, np.float32)})
+    np.testing.assert_array_equal(restored["w"], tree["w"])   # old survives
+    # no stray temp files published into the directory listing
+    assert not [f for f in os.listdir(tmp_path) if f.endswith(".tmp")]
+
+
+def test_none_leaves_roundtrip_through_npz():
+    """TrainState.rng/guard = None must survive save/restore — npz cannot
+    hold None, so _flatten drops them and the template restores them."""
+    st = _state()
+    assert st.rng is None and st.guard is None
+    flat = checkpoint._flatten({"state": st})
+    assert not any(v is None for v in flat.values())
+    rebuilt = checkpoint._unflatten_like({"state": st}, flat, "")["state"]
+    assert rebuilt.rng is None and rebuilt.guard is None
+    assert _tree_equal(rebuilt.params, st.params)
+
+
+def test_guarded_state_roundtrips_bitwise(tmp_path):
+    st = _state(seed=3, guard=True)
+    path = str(tmp_path / "ck")
+    checkpoint.save(path, {"state": st}, metadata={"step": 0})
+    back = checkpoint.restore(path, {"state": st})["state"]
+    assert _tree_equal(back, st)
+    assert isinstance(back.guard, GuardState)
+
+
+# ---------------------------------------------------------------------------
+# CheckpointPolicy / CheckpointManager
+# ---------------------------------------------------------------------------
+
+def test_policy_cadence():
+    p = CheckpointPolicy(every_steps=5)
+    assert [s for s in range(12) if p.should_save(s)] == [5, 10]
+    assert not CheckpointPolicy(every_steps=0).should_save(100)
+
+
+def test_manager_save_load_latest_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), CheckpointPolicy())
+    st = _state(seed=2, guard=True)
+    mgr.save(st, metric=1.5, datapipe={"kind": "X", "pos": 3})
+    path, back = mgr.load_latest(template=st)
+    assert _tree_equal(back, st)
+    assert checkpoint.load_metadata(path)["metric"] == 1.5
+    assert checkpoint.load_datapipe(path) == {"kind": "X", "pos": 3}
+    assert mgr.latest_step() == 0
+
+
+def test_manager_retention_keeps_last_k_plus_best(tmp_path):
+    mgr = CheckpointManager(str(tmp_path),
+                            CheckpointPolicy(keep_last=2, keep_best=True))
+    opt = adamw(1e-3)
+    # best metric at step 1 (0.1), then worse ones — step 1 must survive
+    # pruning even after falling out of the trailing window
+    for step, metric in [(1, 0.1), (2, 5.0), (3, 4.0), (4, 3.0)]:
+        st = TrainState.create({"w": jnp.ones(2) * step}, opt)
+        st = st._replace(step=jnp.asarray(step, jnp.int32))
+        mgr.save(st, metric=metric)
+    steps = [s for s, _ in mgr.checkpoints()]
+    assert steps == [1, 3, 4]
+    assert mgr.best() == mgr.path_for(1)
+
+
+def test_manager_retries_armed_failures_then_succeeds(tmp_path):
+    slept = []
+    mgr = CheckpointManager(str(tmp_path), attempts=3, base_delay=0.01,
+                            sleep=slept.append)
+    mgr.arm_failures(2)
+    mgr.save(_state())
+    assert mgr.io_retries == 2
+    assert slept == [0.01, 0.02]           # deterministic backoff
+    assert mgr.latest_step() == 0          # the third attempt landed
+
+
+def test_manager_exhausted_retries_raise(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), attempts=2, base_delay=0.0,
+                            sleep=lambda _: None)
+    mgr.arm_failures(5)
+    with pytest.raises(RetryError) as ei:
+        mgr.save(_state())
+    assert isinstance(ei.value.__cause__, CheckpointWriteError)
+    assert mgr.checkpoints() == []         # nothing half-published
+
+
+def test_manager_directory_is_the_index(tmp_path):
+    """checkpoints() trusts the listing (atomic writes guarantee complete
+    files) and ignores foreign files."""
+    mgr = CheckpointManager(str(tmp_path))
+    (tmp_path / "ckpt-garbage.npz").write_bytes(b"")
+    (tmp_path / "notes.txt").write_text("hi")
+    mgr.save(_state())
+    assert [s for s, _ in mgr.checkpoints()] == [0]
+
+
+# ---------------------------------------------------------------------------
+# PreemptionHandler
+# ---------------------------------------------------------------------------
+
+def test_preemption_trigger_without_signal():
+    h = PreemptionHandler()
+    assert not h.triggered and not h.installed
+    h.trigger()
+    assert h.triggered
+    h.clear()
+    assert not h.triggered
+
+
+def test_preemption_real_signal_sets_flag_and_uninstall_restores():
+    prev = signal.getsignal(signal.SIGUSR1)
+    with PreemptionHandler(install=True, signals=(signal.SIGUSR1,)) as h:
+        assert h.installed
+        os.kill(os.getpid(), signal.SIGUSR1)
+        # the python-level handler runs on the main thread's next bytecode
+        for _ in range(1000):
+            if h.triggered:
+                break
+        assert h.triggered
+        assert h.received == signal.SIGUSR1
+    assert signal.getsignal(signal.SIGUSR1) is prev   # restored on exit
+
+
+def test_train_loop_should_stop_hook():
+    """The generic loop's cooperative stop: a PreemptionHandler plugged into
+    should_stop ends the loop cleanly mid-schedule."""
+    h = PreemptionHandler()
+    seen = []
+
+    def step(state, batch):
+        seen.append(batch)
+        if len(seen) == 3:
+            h.trigger()
+        from repro.engine.state import StepOutput
+        return state + 1, StepOutput(loss=jnp.asarray(0.0), metrics={})
+
+    state, _, _ = train_loop(step, 0, lambda: len(seen), steps=10,
+                             eval_every=100, should_stop=lambda: h.triggered)
+    assert state == 3                      # stopped after the trigger

@@ -1,0 +1,264 @@
+"""repro.resilience unit layer: retry backoff, guarded stepping, StepGuard
+bookkeeping, batch sanitization.
+
+The load-bearing guarantees: a tripped step leaves params/optimizer/step
+BITWISE unchanged (the accept/reject select lives inside the jitted step),
+a guarded clean run is bitwise-identical to an unguarded one (guarding is
+free when nothing trips), and trip attribution charges the right source."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.core import MTPConfig, make_gfm_mtl
+from repro.data.loader import GroupBatcher
+from repro.data.synthetic_atoms import generate_all
+from repro.engine import ShardingPlan, TrainState, make_step
+from repro.engine.state import StepOutput
+from repro.optim import adamw
+from repro.resilience import (
+    GuardConfig,
+    GuardState,
+    RetryError,
+    StepGuard,
+    make_guarded_step,
+    poison_nan,
+    with_retry,
+    zero_task_slices,
+)
+
+CFG = ArchConfig(name="g", family="gnn", gnn_hidden=16, gnn_layers=2,
+                 n_species=64, head_hidden=8, head_layers=2,
+                 remat=False, compute_dtype=jnp.float32)
+
+
+def _sources(n=16, n_tasks=2):
+    data = generate_all(n, max_atoms=8, max_edges=24,
+                        sources=["ani1x", "qm7x"][:n_tasks])
+    return [dict(species=s.species, pos=s.pos, edge_src=s.edge_src,
+                 edge_dst=s.edge_dst, node_mask=s.node_mask,
+                 edge_mask=s.edge_mask, energy=s.energy, forces=s.forces)
+            for s in data.values()]
+
+
+def _guarded_setup(gcfg=None, n_tasks=2):
+    model = make_gfm_mtl(CFG, n_tasks)
+    opt = adamw(1e-3)
+    plan = ShardingPlan(mtp=MTPConfig(n_tasks=n_tasks), donate=False)
+    step = plan.compile(make_guarded_step(
+        model, opt, plan, guard=gcfg or GuardConfig()))
+    params = model.init(jax.random.PRNGKey(0))
+    state = TrainState.create(params, opt, guard=GuardState.init())
+    batcher = GroupBatcher(_sources(n_tasks=n_tasks), 4, seed=0)
+    return step, state, batcher
+
+
+def _tree_equal(a, b) -> bool:
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree_util.tree_leaves(a),
+                               jax.tree_util.tree_leaves(b)))
+
+
+# ---------------------------------------------------------------------------
+# retry
+# ---------------------------------------------------------------------------
+
+def test_retry_succeeds_after_transient_failures():
+    calls, delays = [], []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise OSError("transient")
+        return "ok"
+
+    assert with_retry(flaky, attempts=4, base_delay=0.1,
+                      sleep=delays.append)() == "ok"
+    assert len(calls) == 3
+    # deterministic exponential backoff, no jitter
+    assert delays == [0.1, 0.2]
+
+
+def test_retry_exhaustion_raises_retry_error_with_cause():
+    def broken():
+        raise OSError("disk on fire")
+
+    with pytest.raises(RetryError) as ei:
+        with_retry(broken, attempts=3, base_delay=0.0, sleep=lambda _: None)()
+    assert ei.value.attempts == 3
+    assert isinstance(ei.value.__cause__, OSError)
+
+
+def test_retry_does_not_catch_non_transient_exceptions():
+    def bad_arg():
+        raise ValueError("not IO")
+
+    slept = []
+    with pytest.raises(ValueError):
+        with_retry(bad_arg, attempts=5, sleep=slept.append)()
+    assert slept == []   # failed immediately, no backoff
+
+
+def test_retry_decorator_form_and_on_retry_observer():
+    seen = []
+
+    @with_retry(attempts=2, base_delay=0.0, sleep=lambda _: None,
+                on_retry=lambda i, e: seen.append((i, type(e).__name__)))
+    def once():
+        if not seen:
+            raise OSError("first")
+        return 7
+
+    assert once() == 7
+    assert seen == [(0, "OSError")]
+
+
+# ---------------------------------------------------------------------------
+# guarded step
+# ---------------------------------------------------------------------------
+
+def test_guarded_step_accepts_clean_batch():
+    step, state, batcher = _guarded_setup()
+    new, out = step(state, batcher.next_batch())
+    assert float(out.metrics["guard_ok"]) == 1.0
+    assert int(new.step) == 1 and int(new.guard.good) == 1
+    assert int(new.guard.trips) == 0
+    assert not _tree_equal(new.params, state.params)   # update applied
+
+
+def test_guarded_step_nan_batch_is_bitwise_noop():
+    """A NaN batch must leave params, optimizer moments AND the step counter
+    bitwise unchanged — the whole point of the in-step select."""
+    step, state, batcher = _guarded_setup()
+    clean = batcher.next_batch()
+    state, _ = step(state, clean)          # one accepted step first
+    before = jax.device_get(state)
+    new, out = step(state, poison_nan(batcher.next_batch()))
+    assert float(out.metrics["guard_ok"]) == 0.0
+    assert not np.isfinite(float(out.loss))
+    assert _tree_equal(new.params, before.params)
+    assert _tree_equal(new.opt_state, before.opt_state)
+    assert int(new.step) == int(before.step)
+    assert int(new.guard.trips) == 1
+
+
+def test_guarded_step_spike_trips_after_warmup_only():
+    gcfg = GuardConfig(spike_factor=1e-6, spike_slack=0.0, warmup_steps=2,
+                       ema_decay=0.5)
+    step, state, batcher = _guarded_setup(gcfg)
+    # warmup: finiteness only, the absurd spike_factor must not trip yet
+    for _ in range(2):
+        state, out = step(state, batcher.next_batch())
+        assert float(out.metrics["guard_ok"]) == 1.0
+    # armed: any loss > 1e-6 * ema trips
+    state, out = step(state, batcher.next_batch())
+    assert float(out.metrics["guard_ok"]) == 0.0
+    assert np.isfinite(float(out.loss))    # a spike trip, not a NaN trip
+
+
+def test_tripped_loss_never_updates_ema():
+    step, state, batcher = _guarded_setup()
+    state, _ = step(state, batcher.next_batch())
+    ema_before = float(state.guard.ema)
+    state, out = step(state, poison_nan(batcher.next_batch()))
+    assert float(out.metrics["guard_ok"]) == 0.0
+    assert float(state.guard.ema) == ema_before
+
+
+def test_guarded_clean_run_matches_unguarded_and_is_deterministic():
+    """With no trips the guard selects the exact update, but guarded and
+    unguarded steps are DIFFERENT XLA programs, so fusion may differ by a
+    few ULPs — the honest contract is (a) tight numerical agreement with
+    the plain step and (b) BITWISE determinism across guarded replays
+    (that's what rollback/resume identity rests on)."""
+    model = make_gfm_mtl(CFG, 2)
+    opt = adamw(1e-3)
+    plan = ShardingPlan(mtp=MTPConfig(n_tasks=2), donate=False)
+    guarded = plan.compile(make_guarded_step(model, opt, plan,
+                                             guard=GuardConfig()))
+    plain = plan.compile(make_step(model, opt, plan))
+    params = model.init(jax.random.PRNGKey(0))
+    ps = TrainState.create(params, opt)
+    b2 = GroupBatcher(_sources(), 4, seed=0)
+
+    def guarded_run():
+        gs = TrainState.create(params, opt, guard=GuardState.init())
+        b = GroupBatcher(_sources(), 4, seed=0)
+        for _ in range(4):
+            gs, out = guarded(gs, b.next_batch())
+            assert float(out.metrics["guard_ok"]) == 1.0
+        return gs
+
+    gs = guarded_run()
+    for _ in range(4):
+        ps, _ = plain(ps, b2.next_batch())
+    for x, y in zip(jax.tree_util.tree_leaves(gs.params),
+                    jax.tree_util.tree_leaves(ps.params)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-5, atol=1e-7)
+    gs2 = guarded_run()                    # bitwise-deterministic replay
+    assert _tree_equal(gs.params, gs2.params)
+    assert _tree_equal(gs.opt_state, gs2.opt_state)
+
+
+# ---------------------------------------------------------------------------
+# StepGuard (host side)
+# ---------------------------------------------------------------------------
+
+def _out(ok: float, per_task=None, loss=1.0):
+    m = {"guard_ok": np.float32(ok)}
+    if per_task is not None:
+        m["per_task_loss"] = np.asarray(per_task, np.float32)
+    return StepOutput(loss=jnp.asarray(loss), metrics=m)
+
+
+def test_step_guard_counts_consecutive_trips_and_rollback():
+    g = StepGuard(GuardConfig(max_consecutive_trips=2), n_sources=0)
+    assert g.observe(_out(1.0)) and not g.should_rollback()
+    assert not g.observe(_out(0.0)) and not g.should_rollback()
+    assert not g.observe(_out(0.0)) and g.should_rollback()
+    g.on_rollback()
+    assert g.consecutive == 0 and g.rollbacks == 1
+    assert g.observe(_out(1.0))            # streak is over
+    assert g.report()["trips"] == 2
+
+
+def test_step_guard_attributes_nonfinite_sources_directly():
+    g = StepGuard(GuardConfig(quarantine_after=2), n_sources=3)
+    g.observe(_out(0.0, per_task=[1.0, np.nan, 2.0]))
+    g.observe(_out(0.0, per_task=[1.0, np.inf, 2.0]))
+    assert g.source_trips.tolist() == [0, 2, 0]
+    assert g.quarantine_candidates() == [1]
+    g.mark_quarantined([1])
+    assert g.quarantine_candidates() == []   # not re-proposed
+
+
+def test_step_guard_finite_spike_charges_argmax():
+    g = StepGuard(GuardConfig(), n_sources=3)
+    g.observe(_out(0.0, per_task=[1.0, 2.0, 50.0]))
+    assert g.source_trips.tolist() == [0, 0, 1]
+
+
+def test_quarantine_candidates_off_by_default():
+    g = StepGuard(GuardConfig(), n_sources=2)   # quarantine_after=0
+    for _ in range(10):
+        g.observe(_out(0.0, per_task=[np.nan, 1.0]))
+    assert g.quarantine_candidates() == []
+
+
+# ---------------------------------------------------------------------------
+# batch sanitization
+# ---------------------------------------------------------------------------
+
+def test_zero_task_slices_scrubs_only_given_tasks():
+    batch = {"pos": np.full((3, 4, 3), 7.0, np.float32),
+             "species": np.full((3, 4), 5, np.int32),
+             "node_mask": np.ones((3, 4), bool)}
+    out = zero_task_slices(batch, [1])
+    for k in batch:
+        arr = np.asarray(out[k])
+        assert not arr[1].any()                       # scrubbed slice inert
+        np.testing.assert_array_equal(arr[0], batch[k][0])
+        np.testing.assert_array_equal(arr[2], batch[k][2])
+    assert zero_task_slices(batch, []) is batch       # no-op passthrough

@@ -1,0 +1,211 @@
+"""The ISSUE-7 soak: a run hit by every fault class (NaN gradients, corrupt
+batch, producer kill, checkpoint-write failure, simulated preemption) must
+finish — across a rollback, an in-place pipeline recovery, retried IO and a
+preempt/resume cycle — with final params BITWISE-IDENTICAL to a run that
+was never faulted.
+
+Why bitwise identity is the right bar: rollback restores params + optimizer
+moments + guard EMA + the byte-identical datapipe position together, the
+replayed compute is deterministic on CPU, and the npz roundtrip is
+bit-exact for f32 — so any single bit of drift means some piece of state
+escaped the recovery path."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig
+from repro.data.synthetic_atoms import generate_all
+from repro.engine import Session, SessionConfig
+from repro.resilience import (
+    CheckpointPolicy,
+    Fault,
+    FaultSchedule,
+    GuardConfig,
+    ResilienceConfig,
+)
+
+CFG = ArchConfig(name="g", family="gnn", gnn_hidden=16, gnn_layers=2,
+                 n_species=64, head_hidden=8, head_layers=2,
+                 remat=False, compute_dtype=jnp.float32)
+STEPS = 14
+
+
+def _sources():
+    data = generate_all(18, max_atoms=8, max_edges=24,
+                        sources=["ani1x", "qm7x", "mptrj"])
+    return [dict(species=s.species, pos=s.pos, edge_src=s.edge_src,
+                 edge_dst=s.edge_dst, node_mask=s.node_mask,
+                 edge_mask=s.edge_mask, energy=s.energy, forces=s.forces)
+            for s in data.values()]
+
+
+def _res(ckpt_dir, faults=None, **guard_kw):
+    gk = dict(warmup_steps=3, spike_factor=50.0, max_consecutive_trips=1)
+    gk.update(guard_kw)
+    return ResilienceConfig(
+        ckpt_dir=str(ckpt_dir),
+        guard=GuardConfig(**gk),
+        policy=CheckpointPolicy(every_steps=5, keep_last=2),
+        faults=faults, retry_base_delay=0.0)
+
+
+def _cfg(res):
+    return SessionConfig(model="gfm-mtl", arch=CFG, steps=STEPS,
+                         batch_per_task=6, eval_every=100, log_every=100,
+                         verbose=False, resilience=res)
+
+
+def _run(res, resume=False):
+    sess = Session.from_config(_cfg(res), sources=_sources())
+    try:
+        if resume:
+            sess.resume()
+        return sess.run()
+    finally:
+        sess.close()
+
+
+def _params_equal(a, b) -> bool:
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree_util.tree_leaves(a.state.params),
+                               jax.tree_util.tree_leaves(b.state.params)))
+
+
+def test_soak_five_fault_classes_bitwise_identical_finish(tmp_path):
+    """One run, all five fault classes, ticks chosen so every recovery path
+    fires: NaN rollback, spike rollback, pipeline recovery, IO retry, and a
+    preemption flush + resume. Final params must match the clean run bit
+    for bit."""
+    faults = FaultSchedule([
+        Fault(tick=5, kind="nan_grad"),
+        Fault(tick=9, kind="corrupt_batch", magnitude=1e6),
+        Fault(tick=12, kind="kill_producer"),
+        Fault(tick=15, kind="ckpt_write_fail"),
+        Fault(tick=18, kind="preempt"),
+    ])
+    assert len({f.kind for fs in faults._by_tick.values()
+                for f in fs}) == 5
+
+    faulted = _run(_res(tmp_path / "faulted", faults))
+    assert faulted.preempted
+    rep = faulted.resilience
+    assert rep["faults_fired"] == 5 and rep["faults_pending"] == 0
+    assert rep["rollbacks"] >= 2            # nan + spike both rolled back
+    assert rep["pipeline_recoveries"] >= 1  # producer kill recovered
+    assert rep["io_retries"] >= 1           # ckpt write retried
+    kinds = {e["kind"] for e in rep["events"]}
+    assert {"rollback", "pipeline_recovery", "preempt_flush"} <= kinds
+
+    resumed = _run(_res(tmp_path / "faulted"), resume=True)
+    assert not resumed.preempted
+    assert int(resumed.state.step) == STEPS
+
+    clean = _run(_res(tmp_path / "clean"))
+    assert clean.resilience["trips"] == 0
+    assert int(clean.state.step) == STEPS
+    assert _params_equal(resumed, clean)
+
+
+def test_nan_at_step_k_rolls_back_and_matches_unfaulted(tmp_path):
+    """ISSUE-7 satellite: NaN gradient injected at a known step -> guard
+    trips -> rollback restores params AND the datapipe byte-identically ->
+    final params match the unfaulted run bitwise."""
+    k = 7
+    faulted = _run(_res(tmp_path / "f",
+                        FaultSchedule([Fault(tick=k, kind="nan_grad")])))
+    rep = faulted.resilience
+    assert rep["trips"] == 1 and rep["rollbacks"] == 1
+    [rb] = [e for e in rep["events"] if e["kind"] == "rollback"]
+    assert rb["tick"] == k and rb["to_step"] == 5   # last policy save
+    assert int(faulted.state.step) == STEPS
+
+    clean = _run(_res(tmp_path / "c"))
+    assert _params_equal(faulted, clean)
+
+
+def test_rollback_without_prefetch_is_also_bitwise(tmp_path):
+    """The synchronous (prefetch=False) path shares the rollback contract —
+    datapipe restore goes straight to the batcher."""
+    faults = FaultSchedule([Fault(tick=6, kind="nan_grad")])
+
+    def run(res):
+        sess = Session.from_config(
+            _cfg(res).replace(prefetch=False), sources=_sources())
+        try:
+            return sess.run()
+        finally:
+            sess.close()
+
+    faulted = run(_res(tmp_path / "f", faults))
+    clean = run(_res(tmp_path / "c"))
+    assert faulted.resilience["rollbacks"] == 1
+    assert _params_equal(faulted, clean)
+
+
+def test_persistent_bad_source_gets_quarantined_and_run_survives(tmp_path):
+    """A source that keeps emitting NaNs is quarantined (loss weight zeroed
+    + batch slice sanitized) instead of killing the run: the run completes
+    its full schedule with a finite loss even though the source's faults
+    keep firing after quarantine."""
+    faults = FaultSchedule([Fault(tick=t, kind="nan_grad", source=1)
+                            for t in (4, 6, 8)])
+    out = _run(_res(tmp_path / "q", faults, quarantine_after=2))
+    rep = out.resilience
+    assert 1 in rep["quarantined"]
+    assert rep["source_trips"][1] >= 2
+    assert int(out.state.step) == STEPS
+    assert np.isfinite(out.final_loss)
+
+
+def test_quarantine_zeroes_loss_weight_and_keeps_guard_quiet(tmp_path):
+    """After quarantine the session's task weights reflect it, and faults
+    from the quarantined source that keep firing no longer reach the
+    parameters: the run finishes its schedule despite a post-quarantine
+    NaN fault (sanitized slice -> finite loss and gradients)."""
+    faults = FaultSchedule([Fault(tick=t, kind="nan_grad", source=2)
+                            for t in (4, 6)])
+    sess = Session.from_config(
+        _cfg(_res(tmp_path / "q", faults, quarantine_after=2)),
+        sources=_sources())
+    try:
+        out = sess.run()
+        assert 2 in out.resilience["quarantined"]
+        assert sess.task_weights[2] == 0.0
+        assert sess._quarantined == {2}
+        assert int(out.state.step) == STEPS
+    finally:
+        sess.close()
+
+
+def test_preempt_flush_writes_resumable_checkpoint(tmp_path):
+    """A preemption mid-run flushes a checkpoint at the CURRENT step with
+    the datapipe sidecar, and resume() picks it up exactly."""
+    res = _res(tmp_path / "p",
+               FaultSchedule([Fault(tick=8, kind="preempt")]))
+    out = _run(res)
+    assert out.preempted and int(out.state.step) == 7   # 7 steps before tick 8
+    d = str(tmp_path / "p")
+    names = sorted(f for f in os.listdir(d) if f.endswith(".npz"))
+    assert f"ckpt-{7:08d}.npz" in names
+    sess = Session.from_config(_cfg(res.replace(faults=None)),
+                               sources=_sources())
+    try:
+        assert sess.resume() == 7
+    finally:
+        sess.close()
+
+
+def test_unrecoverable_ckpt_failure_raises_cleanly(tmp_path):
+    """ckpt_write_fail with repeats >= the retry budget is a FATAL fault:
+    the run raises RetryError instead of silently skipping the save."""
+    from repro.resilience import RetryError
+    res = _res(tmp_path / "x",
+               FaultSchedule([Fault(tick=1, kind="ckpt_write_fail",
+                                    repeats=10)]))
+    res = res.replace(retry_attempts=2,
+                      policy=CheckpointPolicy(every_steps=2, keep_last=2))
+    with pytest.raises(RetryError):
+        _run(res)

@@ -1,0 +1,178 @@
+"""Serve hardening (ISSUE-7): worker-crash propagation and per-request
+deadlines.
+
+The contracts: a dead engine worker fails EVERY pending future immediately
+(queued, in-flight, and binned — nothing hangs), subsequent submits raise
+``ServeClosedError``, and ``restart_worker()`` recovers without
+recompiling; requests that age past ``max_queue_wait`` are shed with
+``DeadlineExceededError`` instead of computed; ``submit()`` under
+backpressure gives up after ``admission_timeout`` in the caller's thread."""
+import threading
+from concurrent.futures import Future
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.mtl import make_gfm_mtl
+from repro.data.bucketing import BucketSpec
+from repro.data.synthetic_atoms import generate_mixture, source_dicts
+from repro.serve import (
+    DeadlineExceededError,
+    ServeClosedError,
+    ServeMetrics,
+    ServeSession,
+)
+from repro.serve.queue import Request, RequestQueue
+
+CFG = ArchConfig(name="serve-res", family="gnn", gnn_hidden=16,
+                 gnn_layers=2, n_species=64, head_hidden=8, head_layers=2,
+                 remat=False, compute_dtype=jnp.float32)
+SPEC = BucketSpec((8, 16), (32, 64))
+
+
+@pytest.fixture(scope="module")
+def served():
+    sources = source_dicts(generate_mixture(24, max_atoms=16, max_edges=64))
+    model = make_gfm_mtl(CFG, len(sources))
+    params = model.init(jax.random.PRNGKey(0))
+    return params, sources
+
+
+def _sample(sources, t=0, i=0):
+    s = sources[t]
+    i = i % s["species"].shape[0]
+    return {k: s[k][i] for k in ("species", "pos", "edge_src", "edge_dst",
+                                 "node_mask", "edge_mask")}
+
+
+# ---------------------------------------------------------------------------
+# worker-crash propagation + restart
+# ---------------------------------------------------------------------------
+
+def test_worker_crash_fails_all_pending_then_restart_recovers(served):
+    """Kill the worker mid-backlog (batcher.add raises): every pending
+    future — including the request the worker had already dequeued — must
+    fail with the crash error, new submits must raise ServeClosedError,
+    and restart_worker() must bring the session back with the compiled
+    executables intact."""
+    params, sources = served
+    srv = ServeSession(params, CFG, spec=SPEC, max_batch=4,
+                       max_wait_ms=2.0)
+    try:
+        release = threading.Event()
+
+        def dying_add(req):
+            # hold the worker here so the test can queue more requests
+            # behind the one being filed, then detonate
+            release.wait(timeout=10)
+            raise RuntimeError("batcher exploded")
+
+        srv.batcher.add = dying_add
+        f1 = srv.submit(_sample(sources, 0), head=0)
+        f2 = srv.submit(_sample(sources, 1), head=1)
+        release.set()
+        for f in (f1, f2):                     # nothing hangs
+            with pytest.raises(RuntimeError, match="batcher exploded"):
+                f.result(timeout=30)
+        srv._worker.join(timeout=10)
+        assert not srv._worker.is_alive()
+
+        with pytest.raises(ServeClosedError):
+            srv.submit(_sample(sources, 0))
+        # back-compat: ServeClosedError IS a RuntimeError matching "closed"
+        with pytest.raises(RuntimeError, match="closed"):
+            srv.submit(_sample(sources, 0))
+
+        compiled_before = len(srv._shapes_compiled)
+        assert srv.restart_worker() is True
+        got = srv.submit(_sample(sources, 2), head=2).result(timeout=60)
+        ref = srv.predict_one(_sample(sources, 2), head=2)
+        assert got["energy"] == ref["energy"]
+        np.testing.assert_array_equal(got["forces"], ref["forces"])
+        assert len(srv._shapes_compiled) >= compiled_before
+
+        c = srv.stats()["counters"]
+        assert c["worker_failures"] == 1
+        assert c["worker_restarts"] == 1
+        assert c["failed"] >= 2
+    finally:
+        srv.close()
+
+
+def test_restart_worker_is_noop_when_healthy_and_raises_when_closed(served):
+    params, _ = served
+    srv = ServeSession(params, CFG, spec=SPEC, max_batch=2)
+    assert srv.restart_worker() is False
+    assert srv.stats()["counters"]["worker_restarts"] == 0
+    srv.close()
+    with pytest.raises(ServeClosedError):
+        srv.restart_worker()
+    with pytest.raises(ServeClosedError):
+        srv.submit({"species": np.zeros(2, np.int32),
+                    "pos": np.zeros((2, 3), np.float32)})
+
+
+# ---------------------------------------------------------------------------
+# deadlines: queue-wait shedding + admission timeout
+# ---------------------------------------------------------------------------
+
+def test_submit_stamps_queue_wait_deadline(served):
+    _, sources = served
+    q = RequestQueue(SPEC, depth=4, n_heads=3, max_queue_wait=0.05)
+    q.submit(_sample(sources, 0), head=0)
+    req = q.get(timeout=1.0)
+    assert req is not None
+    assert req.deadline == pytest.approx(req.t_submit + 0.05)
+
+
+def test_worker_sheds_requests_past_their_deadline(served):
+    """Drive the shed branch deterministically: hand _file a request whose
+    deadline is already in the past (engine clock is monotonic, so any
+    negative deadline is expired). The future must fail with
+    DeadlineExceededError and the shed must be counted — the request never
+    reaches the batcher."""
+    params, sources = served
+    srv = ServeSession(params, CFG, spec=SPEC, max_batch=4,
+                       max_queue_wait_ms=50.0)
+    srv.close()                                # worker quiesced; _file is ours
+    sm = _sample(sources, 0)
+    from repro.serve.queue import _as_sample
+    canon, n_atoms, n_edges = _as_sample(sm)
+    req = Request(sample=canon, head=0, bucket=SPEC.bucket_for(n_atoms,
+                                                               n_edges),
+                  n_atoms=n_atoms, n_edges=n_edges, future=Future(),
+                  t_submit=0.0, deadline=-1.0)
+    assert srv._file(req) is None
+    with pytest.raises(DeadlineExceededError):
+        req.future.result(timeout=0)
+    assert srv.stats()["counters"]["shed_deadline"] == 1
+    assert srv.batcher.pending_requests() == []
+
+
+def test_admission_timeout_sheds_in_caller_thread(served):
+    """depth=1 and no consumer: the first submit takes the only slot, the
+    second must give up after admission_timeout in the CALLER's thread."""
+    _, sources = served
+    m = ServeMetrics()
+    q = RequestQueue(SPEC, depth=1, n_heads=3, admission_timeout=0.05,
+                     metrics=m)
+    q.submit(_sample(sources, 0), head=0)
+    with pytest.raises(DeadlineExceededError, match="saturated"):
+        q.submit(_sample(sources, 1), head=1)
+    assert m.counters["shed_admission"] == 1
+    assert m.counters["submitted"] == 1        # the shed one never counted
+
+
+def test_closed_queue_rejects_submits_with_closed_error(served):
+    _, sources = served
+    q = RequestQueue(SPEC, depth=2, n_heads=3)
+    q.close()
+    with pytest.raises(ServeClosedError):
+        q.submit(_sample(sources, 0))
+    with pytest.raises(RuntimeError, match="closed"):   # back-compat
+        q.submit(_sample(sources, 0))
+    q.close()                                  # idempotent re-entry
