@@ -149,11 +149,11 @@ def _run_steps(step, state, next_batch, n, warmup):
     ts = []
     for i in range(warmup + n):
         b = jax.device_put(next_batch())
-        t0 = time.time()
+        t0 = time.perf_counter()
         state, out = step(state, b)
         jax.block_until_ready(out.loss)
         if i >= warmup:
-            ts.append(time.time() - t0)
+            ts.append(time.perf_counter() - t0)
     return float(np.median(ts))
 
 

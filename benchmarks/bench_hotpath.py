@@ -63,11 +63,11 @@ SMOKE = dict(agg=dict(B=2, E=96, A=16, F=32, iters=3),
 def _time(f, *args, iters=10, warmup=2):
     for _ in range(warmup):
         jax.block_until_ready(f(*args))
-    t0 = time.time()
+    t0 = time.perf_counter()
     for _ in range(iters):
         o = f(*args)
     jax.block_until_ready(o)
-    return (time.time() - t0) / iters
+    return (time.perf_counter() - t0) / iters
 
 
 # ---------------------------------------------------------------------------
@@ -82,6 +82,7 @@ def bench_segment_sum(B, E, A, F, iters):
     em = jax.random.bernoulli(jax.random.PRNGKey(1), 0.9, (B, E))
     us = {}
     for impl in ("jnp", "scatter", "pallas"):
+        # lint: allow(RCP001): one jit per swept impl, amortized over iters
         f = jax.jit(functools.partial(
             lambda m, d, e, impl: segment_sum_nodes(m, d, A, edge_mask=e,
                                                     impl=impl), impl=impl))
@@ -108,6 +109,7 @@ def bench_egnn_forward(B, E, A, hidden, layers, iters):
     cfg, params, batch = _egnn_setup(B, E, A, hidden, layers)
     us = {}
     for impl in ("jnp", "scatter", "pallas", "fused"):
+        # lint: allow(RCP001): one jit per swept impl, amortized over iters
         f = jax.jit(functools.partial(
             lambda p, b, impl: gnn.egnn_apply(p, b, cfg=cfg, impl=impl),
             impl=impl))
@@ -128,6 +130,7 @@ def bench_egnn_train_step(B, E, A, hidden, layers, iters):
     for impl in ("scatter", "fused"):
         def loss(p, b, impl=impl):
             return jnp.mean(gnn.egnn_apply(p, b, cfg=cfg, impl=impl) ** 2)
+        # lint: allow(RCP001): one jit per swept impl, amortized over iters
         f = jax.jit(jax.value_and_grad(loss))
         us[impl] = _time(f, params, batch, iters=iters, warmup=1) * 1e6
     return {"shape": dict(B=B, E=E, A=A, hidden=hidden, layers=layers),
@@ -163,7 +166,9 @@ def bench_block_h_sweep(B, E, A, hidden, block_hs, iters):
 
     sweep = {}
     for bh in block_hs:
+        # lint: allow(RCP001): one jit per swept block size
         f = jax.jit(functools.partial(fwd, block_h=bh))
+        # lint: allow(RCP001): one jit per swept block size
         g = jax.jit(jax.value_and_grad(
             lambda hh, bh=bh: jnp.sum(fwd(hh, bh) * gw)))
         sweep[str(bh)] = {
@@ -243,11 +248,11 @@ def _run_steps(step, state, next_batch, n, warmup):
     rate, robust to scheduler/GC spikes on shared CI hosts."""
     ts = []
     for i in range(warmup + n):
-        t0 = time.time()
+        t0 = time.perf_counter()
         state, out = step(state, next_batch())
         jax.block_until_ready(out.loss)
         if i >= warmup:
-            ts.append(time.time() - t0)
+            ts.append(time.perf_counter() - t0)
     return float(np.median(ts))
 
 

@@ -17,11 +17,11 @@ import jax.numpy as jnp
 def _time(f, *args, iters=5):
     o = f(*args)
     jax.block_until_ready(o)
-    t0 = time.time()
+    t0 = time.perf_counter()
     for _ in range(iters):
         o = f(*args)
     jax.block_until_ready(o)
-    return (time.time() - t0) / iters
+    return (time.perf_counter() - t0) / iters
 
 
 def bench_attention():

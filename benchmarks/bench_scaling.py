@@ -138,11 +138,11 @@ def measured_8dev(cfg, steps=12, *, n_tasks=4, dp=2):
         b = plan.shard_batch(batch)
         state, o = step(state, b)  # compile+warm (donates the fresh state)
         jax.block_until_ready(o.loss)
-        t0 = time.time()
+        t0 = time.perf_counter()
         for _ in range(steps):
             state, o = step(state, b)
         jax.block_until_ready(o.loss)
-        out[mode] = (time.time() - t0) / steps
+        out[mode] = (time.perf_counter() - t0) / steps
     return out
 
 

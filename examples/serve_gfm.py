@@ -55,7 +55,7 @@ with srv:
     rng = np.random.default_rng(0)
     keys = ("species", "pos", "edge_src", "edge_dst", "node_mask",
             "edge_mask")
-    t0 = time.time()
+    t0 = time.perf_counter()
     futs = []
     for _ in range(args.requests):
         t = int(rng.integers(len(sources)))
@@ -68,7 +68,7 @@ with srv:
               f"forces {out['forces'].shape}")
     for _, fut in futs:
         fut.result(timeout=60)
-    wall = time.time() - t0
+    wall = time.perf_counter() - t0
     stats = srv.stats()
 
 c, lat = stats["counters"], stats["latency"]["e2e"]

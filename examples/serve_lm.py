@@ -31,9 +31,9 @@ prompt = jax.random.randint(jax.random.PRNGKey(1),
 memory = (jnp.zeros((args.batch, 32, cfg.d_model), cfg.compute_dtype)
           if cfg.n_enc_layers else None)
 
-t0 = time.time()
+t0 = time.perf_counter()
 out = greedy_generate(params, cfg, prompt, args.new, memory=memory)
-dt = time.time() - t0
+dt = time.perf_counter() - t0
 print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} "
       f"new={args.new}  wall={dt:.2f}s "
       f"({args.batch * args.new / dt:.1f} tok/s on CPU)")

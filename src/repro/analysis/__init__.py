@@ -1,0 +1,38 @@
+"""repro.analysis — static analysis + runtime sanitizers for the repo's
+compiled-path contracts.
+
+The paper's "robust pre-training" claim rests on invariants that ordinary
+tests can't see failing: a recompile storm wastes node-hours without a
+single assertion tripping, an unseeded RNG in the data path silently breaks
+the bitwise-replay guarantee the resilience layer depends on, and a Pallas
+kernel whose block sizes bypass the VMEM budget model compiles fine on the
+CPU interpreter and OOMs on the first TPU run. This package makes those
+contracts machine-checkable:
+
+  * ``repro.analysis.lint`` — an AST linter with repo-specific rules
+    (``python -m repro.analysis.lint src benchmarks examples``). Rule
+    catalog: ``rules.RULES`` / ``docs/static_analysis.md``.
+  * ``repro.analysis.baseline`` — accepted-findings file so pre-existing
+    findings pass while NEW ones gate CI.
+  * ``repro.analysis.recompile`` — ``RecompileSanitizer``: declared
+    XLA-compilation budgets over jitted callables (the serve-side
+    ``_cache_size`` check, generalized to ``Session`` training and
+    ``bench_*`` loops).
+  * ``repro.analysis.tsan`` — ``ThreadSanitizer``: lock-ownership and
+    mutual-exclusion contract checking for the threaded pieces
+    (``data/prefetch.py``, ``serve/queue.py``); instrumented in tests only.
+
+Everything here is stdlib-only (no jax import), so the CI lint job runs
+without installing the accelerator stack.
+"""
+from .baseline import Baseline, apply_baseline
+from .findings import Finding
+from .recompile import RecompileBudgetError, RecompileSanitizer
+from .rules import RULES, rule_ids
+from .tsan import ThreadContractViolation, ThreadSanitizer, TrackedLock
+
+__all__ = [
+    "Finding", "Baseline", "apply_baseline", "RULES", "rule_ids",
+    "RecompileSanitizer", "RecompileBudgetError",
+    "ThreadSanitizer", "ThreadContractViolation", "TrackedLock",
+]

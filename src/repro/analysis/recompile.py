@@ -1,0 +1,129 @@
+"""RecompileSanitizer — declared XLA-compilation budgets, enforced.
+
+The serve engine already gates its jit cache (``tests/test_serve_engine.py``
+asserts ``_predict._cache_size()`` against the grid×heads budget); this
+generalizes that check to anything that compiles: ``Session`` training
+runs, ``bench_*`` loops, ad-hoc jitted functions. A recompile storm — a
+shape leaking into a traced argument, a factory re-jitting per call — never
+fails a numeric test; it just multiplies step time by the compile latency
+and burns the allocation. Declaring the budget turns it into a crash.
+
+Usage::
+
+    from repro.analysis import RecompileSanitizer
+
+    with RecompileSanitizer(budget=2, label="20-step session") as san:
+        san.track_session(session)      # engine.Session seam
+        session.run()
+    # exit raises RecompileBudgetError if compilations exceeded the budget
+
+Counting is by cache-size *delta* since ``track()``: functions already
+warmed up before tracking start from zero. Stdlib-only: the probe duck-
+types on ``_cache_size`` (jax's jit/pjit wrapper) or ``cache_size``
+(``repro.engine.plan.CompiledStep`` seam) — no jax import here.
+"""
+from __future__ import annotations
+
+import threading
+
+
+class RecompileBudgetError(RuntimeError):
+    """Tracked functions compiled more than the declared budget allows."""
+
+
+def _probe_for(fn):
+    """A zero-arg callable returning ``fn``'s current compile count, or
+    None if ``fn`` exposes no cache-size seam."""
+    probe = getattr(fn, "cache_size", None)           # CompiledStep seam
+    if callable(probe):
+        return probe
+    raw = getattr(fn, "_cache_size", None)            # jax jit/pjit wrapper
+    if callable(raw):
+        return raw
+    return None
+
+
+class RecompileSanitizer:
+    """Fail when tracked callables exceed a declared compilation budget.
+
+    budget: max NEW compilations across all tracked functions (cache-size
+    growth since each was tracked). ``check()`` raises
+    ``RecompileBudgetError``; as a context manager, ``__exit__`` checks
+    automatically (only on a clean exit — an in-flight exception wins).
+    """
+
+    def __init__(self, budget: int, *, label: str = ""):
+        assert budget >= 0, f"budget must be >= 0, got {budget}"
+        self.budget = int(budget)
+        self.label = label
+        self._mx = threading.Lock()
+        self._tracked: list[tuple[str, object, int]] = []  # (name, probe, base)
+
+    # -- registration -------------------------------------------------------
+
+    def track(self, fn, name: str | None = None) -> bool:
+        """Track one jitted callable. Returns False (and skips it) when the
+        object exposes no cache-size seam — callers that require tracking
+        can assert on the return value."""
+        probe = _probe_for(fn)
+        if probe is None:
+            return False
+        with self._mx:
+            self._tracked.append(
+                (name or getattr(fn, "__name__", type(fn).__name__),
+                 probe, int(probe())))
+        return True
+
+    def track_session(self, session, name: str = "session"):
+        """Track an ``engine.Session`` LIVE: the probe re-reads
+        ``session.compiled_functions()`` at every check, so a step rebuilt
+        mid-run (e.g. quarantine recompiles) still counts against the
+        budget instead of silently escaping the tracker. Every callable ever
+        seen stays in the sum (holding a reference, so ids are stable) —
+        swapping in a fresh step must not erase the old one's compiles."""
+        seen: dict[int, tuple] = {}   # id(fn) -> (fn ref, probe)
+
+        def probe():
+            for f in session.compiled_functions():
+                p = _probe_for(f)
+                if p is not None:
+                    seen[id(f)] = (f, p)
+            return sum(int(p()) for _f, p in seen.values())
+        with self._mx:
+            self._tracked.append((name, probe, int(probe())))
+
+    # -- accounting ---------------------------------------------------------
+
+    def compilations(self) -> int:
+        """NEW compilations across all tracked functions since tracking."""
+        with self._mx:
+            return sum(max(0, int(probe()) - base)
+                       for _, probe, base in self._tracked)
+
+    def report(self) -> dict:
+        """Per-function compile counts, for test assertions and logs."""
+        with self._mx:
+            return {name: max(0, int(probe()) - base)
+                    for name, probe, base in self._tracked}
+
+    def check(self):
+        n = self.compilations()
+        if n > self.budget:
+            detail = ", ".join(f"{k}={v}" for k, v in self.report().items()
+                               if v) or "untracked"
+            label = f" [{self.label}]" if self.label else ""
+            raise RecompileBudgetError(
+                f"recompile budget exceeded{label}: {n} compilation(s) > "
+                f"budget {self.budget} ({detail}) — a shape/dtype is "
+                "leaking into a traced signature, or a factory re-jits "
+                "per call (rules RCP001-003)")
+
+    # -- context manager ----------------------------------------------------
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        if exc_type is None:
+            self.check()
+        return False

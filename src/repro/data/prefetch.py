@@ -78,8 +78,14 @@ class Prefetcher:
     def _start(self):
         self._q: queue.Queue = queue.Queue(maxsize=self.depth)
         self._stop = threading.Event()
+        # instrumentation seam (repro.analysis.tsan tests): producer
+        # generations are SEQUENTIAL — a restore halts generation N before
+        # generation N+1 draws, which is why the single-producer contract
+        # is overlap-based, not thread-identity-based
+        self.generation = getattr(self, "generation", 0) + 1
         self._thread = threading.Thread(
-            target=self._produce, name="prefetcher", daemon=True)
+            target=self._produce, name=f"prefetcher-{self.generation}",
+            daemon=True)
         self._thread.start()
 
     def _put(self, item) -> bool:

@@ -177,3 +177,12 @@ class CompiledStep:
 
     def lower(self, state, batch):
         return self._get(state, batch).lower(state, batch)
+
+    def cache_size(self) -> int:
+        """Number of XLA compilations held by the underlying jit cache
+        (0 before first call) — the probe seam for
+        ``repro.analysis.RecompileSanitizer``."""
+        if self._jitted is None:
+            return 0
+        probe = getattr(self._jitted, "_cache_size", None)
+        return int(probe()) if callable(probe) else 0

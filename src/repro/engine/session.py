@@ -308,6 +308,13 @@ class Session:
                              task_weights=self.task_weights)
         self.compiled_step = self.plan.compile(step)
 
+    def compiled_functions(self):
+        """The session's compiled callables, re-read live — the probe seam
+        for ``repro.analysis.RecompileSanitizer.track_session`` (a step
+        rebuilt by quarantine replaces ``compiled_step``, so trackers must
+        not cache the object)."""
+        return (self.compiled_step,)
+
     def n_params(self) -> int:
         return sum(int(x.size) for x in
                    jax.tree_util.tree_leaves(self.state.params))

@@ -76,6 +76,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.egnn_edge.budget import check_blocks
 from repro.kernels.segment_sum.kernel import accumulate_tile, resolve_interpret
 
 
@@ -167,6 +168,9 @@ def egnn_edge_fused(h, pos, src, dst, w0i, w0j, w0d, b0, w1, b1, *,
     ne = -(-E // be)
     bh = min(block_h, H)
     nh = -(-H // bh)
+    # defense in depth: ops plans blocks, but a direct caller's override
+    # must never compile over-budget (trace-time raise, shapes are static)
+    check_blocks(A, E, H, be, bh, itemsize=h.dtype.itemsize)
     if ne * be != E:
         pe = ne * be - E
         # pad sentinel A: matches no node id, contributes nothing
@@ -332,6 +336,7 @@ def egnn_edge_fused_bwd(g, h, pos, src, dst, w0i, w0j, w0d, b0, w1, *,
     ne = -(-E // be)
     bh = min(block_h, H)
     nh = -(-H // bh)
+    check_blocks(A, E, H, be, bh, itemsize=h.dtype.itemsize)
     Hp = nh * bh
     if ne * be != E:
         pe = ne * be - E

@@ -25,6 +25,37 @@ from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
 
+VMEM_BUDGET = (16 << 20) - (4 << 20)   # physical VMEM minus Mosaic headroom
+
+
+def vmem_bytes(D: int, block_q: int, block_k: int, *,
+               itemsize: int = 4) -> int:
+    """Modeled resident VMEM of one kernel step: double-buffered block DMA
+    (×2) for q/k/v/out tiles and the pos streams, f32 online-softmax scratch
+    (m, l, acc), plus the live f32 casts and the (BQ, BK) score/prob tiles.
+    ``itemsize`` is the in/out dtype width; all kernel math is f32."""
+    bq, bk = block_q, block_k
+    return (2 * (bq + bk) * 4                  # q_pos / k_pos int32 streams
+            + 2 * bq * D * itemsize            # q tile (double-buffered)
+            + 2 * 2 * bk * D * itemsize        # k + v tiles
+            + 2 * bq * D * itemsize            # out tile
+            + (2 * bq + bq * D) * 4            # m, l, acc scratch
+            + (bq + 2 * bk) * D * 4            # live f32 casts of q, k, v
+            + 2 * bq * bk * 4)                 # live s and p score tiles
+
+
+def check_blocks(D: int, block_q: int, block_k: int, *, itemsize: int = 4,
+                 vmem_limit: int = VMEM_BUDGET) -> None:
+    """Raise if an explicit (block_q, block_k) override exceeds the VMEM
+    budget — over-budget configs must fail at trace time, not OOM on core."""
+    need = vmem_bytes(D, block_q, block_k, itemsize=itemsize)
+    if need > vmem_limit:
+        raise ValueError(
+            f"flash_attention blocks (block_q={block_q}, block_k={block_k}) "
+            f"need ≈{need / 2 ** 20:.1f} MiB of VMEM at D={D} — over the "
+            f"{vmem_limit / 2 ** 20:.1f} MiB budget; halve the blocks "
+            f"(the 128/128 defaults fit every supported head dim).")
+
 
 def _fa_kernel(qp_ref, kp_ref, q_ref, k_ref, v_ref, o_ref,
                m_ref, l_ref, acc_ref, *, scale, causal, window, nk):
@@ -78,6 +109,7 @@ def flash_attention_bhsd(q, k, v, q_pos, k_pos, *, causal=True, window=0,
     bq = min(block_q, Sq)
     bk = min(block_k, Sk)
     nq, nk = -(-Sq // bq), -(-Sk // bk)
+    check_blocks(D, bq, bk, itemsize=q.dtype.itemsize)
     q_pos = q_pos.astype(jnp.int32)
     k_pos = k_pos.astype(jnp.int32)
     if nq * bq != Sq:

@@ -29,6 +29,40 @@ from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
 
+VMEM_BUDGET = (16 << 20) - (4 << 20)   # physical VMEM minus Mosaic headroom
+
+
+def vmem_bytes(D: int, G: int, per_split: int, block_k: int, *,
+               itemsize: int = 4) -> int:
+    """Modeled resident VMEM of one (batch, kv_head, split) program. The
+    dominant term is the SPLIT slice, not ``block_k``: the k/v BlockSpecs
+    carve ``(1, 1, per_split, D)``, so the whole slice is DMA'd (double-
+    buffered) and the fori_loop sub-tiles it in-VMEM with ``pl.dslice``."""
+    return (2 * 2 * per_split * D * itemsize   # k + v split slices (×2 DMA)
+            + 2 * per_split * 4                # k_pos int32 stream
+            + 2 * G * D * itemsize             # q block
+            + 2 * (2 * G + G * D) * 4          # m/l/acc partial outputs
+            + 2 * block_k * D * 4              # live f32 casts of k, v tiles
+            + 2 * G * D * 4                    # live f32 q cast + acc carry
+            + 2 * G * block_k * 4)             # live s and p score tiles
+
+
+def check_blocks(S: int, D: int, G: int, n_splits: int, block_k: int, *,
+                 itemsize: int = 4, vmem_limit: int = VMEM_BUDGET) -> None:
+    """Raise if an (n_splits, block_k) config exceeds the VMEM budget for a
+    cache of length S — fail at trace time instead of OOMing on core. Longer
+    caches need MORE splits (per_split shrinks), not bigger blocks."""
+    bk = min(block_k, S)
+    per_split = -(-S // (n_splits * bk)) * bk
+    need = vmem_bytes(D, G, per_split, bk, itemsize=itemsize)
+    if need > vmem_limit:
+        raise ValueError(
+            f"flash_decode config (n_splits={n_splits}, block_k={block_k}) "
+            f"puts a per-split slice of {per_split} kv rows ≈"
+            f"{need / 2 ** 20:.1f} MiB in VMEM at (S={S}, D={D}, G={G}) — "
+            f"over the {vmem_limit / 2 ** 20:.1f} MiB budget; raise n_splits "
+            f"or shrink block_k.")
+
 
 def _fd_kernel(qpos_ref, kp_ref, q_ref, k_ref, v_ref,
                m_out, l_out, acc_out, *, scale, window, blocks_per_split, bk):
@@ -85,6 +119,7 @@ def flash_decode_partials(q, k, v, q_pos, k_pos, *, window=0, scale=None,
     G = H // K
     scale = scale if scale is not None else D ** -0.5
     bk = min(block_k, S)
+    check_blocks(S, D, G, n_splits, block_k, itemsize=q.dtype.itemsize)
     # pad S to n_splits * blocks_per_split * bk
     per_split = -(-S // (n_splits * bk)) * bk
     S_pad = per_split * n_splits

@@ -178,12 +178,12 @@ def _build_gfm_lowered(cfg, mesh):
 
 def analyze(lowered, compile_too=True) -> dict:
     res = {}
-    t0 = time.time()
+    t0 = time.perf_counter()
     res["lower_s"] = None
     hlo = None
     if compile_too:
         compiled = lowered.compile()
-        res["compile_s"] = round(time.time() - t0, 2)
+        res["compile_s"] = round(time.perf_counter() - t0, 2)
         try:
             ma = compiled.memory_analysis()
             res["memory"] = {
@@ -232,7 +232,7 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, *, impl="chunked",
         mesh = make_alt_mesh(8)
     else:
         mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
-    t0 = time.time()
+    t0 = time.perf_counter()
     try:
         lowered, meta = build_lowered(arch, shape_name, mesh, impl=impl,
                                       accum=accum, cfg_override=cfg_override)
@@ -243,7 +243,7 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, *, impl="chunked",
         entry["status"] = "fail"
         entry["error"] = f"{type(e).__name__}: {e}"
         entry["trace"] = traceback.format_exc()[-2000:]
-    entry["total_s"] = round(time.time() - t0, 2)
+    entry["total_s"] = round(time.perf_counter() - t0, 2)
     return entry
 
 

@@ -215,6 +215,12 @@ class ServeSession:
             jax.block_until_ready((e, f))
         return len(self._shapes_compiled)
 
+    def jit_functions(self):
+        """The session's jitted callables — the probe seam for
+        ``repro.analysis.RecompileSanitizer`` (tracks ``_predict``'s cache
+        the same way ``tests/test_serve_engine.py`` asserts on it)."""
+        return (self._predict,)
+
     def stats(self) -> dict:
         """Metrics snapshot + executable-cache occupancy (plain dict)."""
         out = self.metrics.snapshot()

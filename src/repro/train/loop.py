@@ -63,10 +63,10 @@ class EarlyStopping:
 @dataclass
 class MetricLogger:
     history: list = field(default_factory=list)
-    t0: float = field(default_factory=time.time)
+    t0: float = field(default_factory=time.perf_counter)
 
     def log(self, step: int, **metrics):
-        row = {"step": step, "wall": time.time() - self.t0}
+        row = {"step": step, "wall": time.perf_counter() - self.t0}
         row.update({k: float(v) for k, v in metrics.items()})
         self.history.append(row)
         return row

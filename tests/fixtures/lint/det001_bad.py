@@ -1,0 +1,6 @@
+"""Seeded DET001: the legacy process-global numpy RNG."""
+import numpy as np
+
+
+def shuffled_indices(n):
+    return np.random.permutation(n)

@@ -1,0 +1,7 @@
+"""Clean twin of DET001: a held, seeded Generator (the repo convention)."""
+import numpy as np
+
+
+def shuffled_indices(n, seed):
+    rng = np.random.default_rng(seed)
+    return rng.permutation(n)

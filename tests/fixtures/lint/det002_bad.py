@@ -1,0 +1,6 @@
+"""Seeded DET002: the stdlib global RNG."""
+import random
+
+
+def pick(xs):
+    return random.choice(xs)

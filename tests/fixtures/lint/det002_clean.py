@@ -1,0 +1,7 @@
+"""Clean twin of DET002: a held, seeded Random instance."""
+import random
+
+
+def pick(xs, seed):
+    rng = random.Random(seed)
+    return rng.choice(xs)

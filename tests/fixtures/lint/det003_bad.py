@@ -1,0 +1,8 @@
+"""Seeded DET003: durations computed from the non-monotonic wall clock."""
+import time
+
+
+def timed(f):
+    t0 = time.time()
+    f()
+    return time.time() - t0

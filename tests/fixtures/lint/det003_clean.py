@@ -1,0 +1,8 @@
+"""Clean twin of DET003: perf_counter for durations."""
+import time
+
+
+def timed(f):
+    t0 = time.perf_counter()
+    f()
+    return time.perf_counter() - t0

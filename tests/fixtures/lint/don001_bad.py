@@ -1,0 +1,10 @@
+"""Seeded DON001: reading a buffer after passing it at a donated position."""
+import jax
+
+
+def run(step_fn, state, batches):
+    step = jax.jit(step_fn, donate_argnums=(0,))
+    for batch in batches:
+        new_state, out = step(state, batch)
+        print(state.params)
+    return new_state, out

@@ -1,0 +1,7 @@
+"""Seeded PAL001: bare int indices in pl.load/pl.store (the PR 3 bug)."""
+from jax.experimental import pallas as pl
+
+
+def kernel(x_ref, o_ref):
+    row = pl.load(x_ref, (0, pl.dslice(0, 8)))
+    pl.store(o_ref, (0, pl.dslice(0, 8)), row)

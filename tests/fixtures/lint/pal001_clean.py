@@ -1,0 +1,7 @@
+"""Clean twin of PAL001: unit dims via pl.dslice(0, 1), squeezed after."""
+from jax.experimental import pallas as pl
+
+
+def kernel(x_ref, o_ref):
+    row = pl.load(x_ref, (pl.dslice(0, 1), pl.dslice(0, 8)))[0]
+    pl.store(o_ref, (pl.dslice(0, 1), pl.dslice(0, 8)), row[None])

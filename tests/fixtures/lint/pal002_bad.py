@@ -1,0 +1,16 @@
+"""Seeded PAL002: pallas_call with no VMEM planning anywhere in the module."""
+import jax
+from jax.experimental import pallas as pl
+
+
+def double(x, tile=128):
+    def kern(x_ref, o_ref):
+        o_ref[...] = x_ref[...] * 2
+
+    return pl.pallas_call(
+        kern,
+        grid=(x.shape[0] // tile,),
+        in_specs=[pl.BlockSpec((tile,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)

@@ -1,0 +1,25 @@
+"""Clean twin of PAL002: tile sizes validated against a VMEM budget model."""
+import jax
+from jax.experimental import pallas as pl
+
+from repro.kernels.egnn_edge.budget import VMEM_BUDGET
+
+
+def check_blocks(tile, itemsize, vmem_limit=VMEM_BUDGET):
+    if 2 * 2 * tile * itemsize > vmem_limit:
+        raise ValueError(f"tile {tile} over the VMEM budget")
+
+
+def double(x, tile=128):
+    check_blocks(tile, x.dtype.itemsize)
+
+    def kern(x_ref, o_ref):
+        o_ref[...] = x_ref[...] * 2
+
+    return pl.pallas_call(
+        kern,
+        grid=(x.shape[0] // tile,),
+        in_specs=[pl.BlockSpec((tile,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)

@@ -1,0 +1,28 @@
+"""Seeded PAL003: a low-precision VMEM scratch used as an accumulator.
+
+The module routes its tile through check_blocks so only the scratch-dtype
+contract (PAL003) is violated here.
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.egnn_edge.budget import check_blocks
+
+
+def reduce_rows(x, tile=128):
+    check_blocks(x.shape[0], x.shape[0], x.shape[1], tile, tile)
+
+    def kern(x_ref, o_ref, acc):
+        acc[...] += x_ref[...].astype(acc.dtype)
+        o_ref[...] = acc[...]
+
+    return pl.pallas_call(
+        kern,
+        grid=(x.shape[0] // tile,),
+        in_specs=[pl.BlockSpec((tile, x.shape[1]), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tile, x.shape[1]), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        scratch_shapes=[pltpu.VMEM((tile, x.shape[1]), jnp.bfloat16)],
+    )(x)

@@ -1,0 +1,24 @@
+"""Clean twin of PAL003: f32 accumulator scratch, cast on the final flush."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.egnn_edge.budget import check_blocks
+
+
+def reduce_rows(x, tile=128):
+    check_blocks(x.shape[0], x.shape[0], x.shape[1], tile, tile)
+
+    def kern(x_ref, o_ref, acc):
+        acc[...] += x_ref[...].astype(jnp.float32)
+        o_ref[...] = acc[...].astype(o_ref.dtype)
+
+    return pl.pallas_call(
+        kern,
+        grid=(x.shape[0] // tile,),
+        in_specs=[pl.BlockSpec((tile, x.shape[1]), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tile, x.shape[1]), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        scratch_shapes=[pltpu.VMEM((tile, x.shape[1]), jnp.float32)],
+    )(x)

@@ -1,0 +1,9 @@
+"""Seeded RCP001: a fresh jit wrapper (and compile) every iteration."""
+import jax
+
+
+def sweep(f, xs):
+    outs = []
+    for x in xs:
+        outs.append(jax.jit(f)(x))
+    return outs

@@ -1,0 +1,10 @@
+"""Clean twin of RCP001: jit once, call many times."""
+import jax
+
+
+def sweep(f, xs):
+    jf = jax.jit(f)
+    outs = []
+    for x in xs:
+        outs.append(jf(x))
+    return outs

@@ -1,0 +1,13 @@
+"""Seeded RCP002: jitted inner function closes over a factory-built array."""
+import jax
+import jax.numpy as jnp
+
+
+def make_step(n):
+    scale = jnp.ones((n,))
+
+    @jax.jit
+    def step(x):
+        return x * scale
+
+    return step

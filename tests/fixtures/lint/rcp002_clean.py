@@ -1,0 +1,15 @@
+"""Clean twin of RCP002: the array is an argument, not a baked constant."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def make_step(n):
+    scale = jnp.ones((n,))
+
+    @jax.jit
+    def step(x, scale):
+        return x * scale
+
+    return functools.partial(step, scale=scale)

@@ -1,0 +1,8 @@
+"""Seeded RCP003: an array expression passed for a declared static arg."""
+import jax
+import jax.numpy as jnp
+
+
+def build(g):
+    f = jax.jit(g, static_argnames=("mask",))
+    return f(jnp.ones((4,)), mask=jnp.ones((4,), bool))

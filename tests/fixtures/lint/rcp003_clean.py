@@ -1,0 +1,8 @@
+"""Clean twin of RCP003: statics are hashable scalars/tuples."""
+import jax
+import jax.numpy as jnp
+
+
+def build(g):
+    f = jax.jit(g, static_argnames=("mask",))
+    return f(jnp.ones((4,)), mask=(True, True, False, True))

@@ -1,0 +1,10 @@
+"""Seeded TRC001: Python `if` on a traced value inside a jitted function."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def step(x):
+    if jnp.any(x > 0):
+        return x + 1
+    return x - 1

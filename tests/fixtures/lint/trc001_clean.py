@@ -1,0 +1,8 @@
+"""Clean twin of TRC001: the branch stays inside the compiled program."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def step(x):
+    return jnp.where(jnp.any(x > 0), x + 1, x - 1)

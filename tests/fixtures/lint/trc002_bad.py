@@ -1,0 +1,9 @@
+"""Seeded TRC002: host-sync coercions inside a jit-reachable function."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def loss_scalar(x):
+    total = jnp.sum(x)
+    return float(jnp.mean(x)) + total.item()

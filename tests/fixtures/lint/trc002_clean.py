@@ -1,0 +1,12 @@
+"""Clean twin of TRC002: scalars stay on device inside the jitted region."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def loss_scalar(x):
+    return jnp.mean(x) + jnp.sum(x)
+
+
+def read_out(x):
+    return float(loss_scalar(x))

@@ -1,0 +1,11 @@
+"""Clean twin of TRC003: accumulate on device, read back once after."""
+import jax
+import jax.numpy as jnp
+
+
+def train(step, state, batches):
+    losses = []
+    for batch in batches:
+        state, out = step(state, batch)
+        losses.append(out.loss)
+    return state, jax.device_get(jnp.stack(losses))

@@ -1,0 +1,195 @@
+"""The lint-rule suite: every rule catches its seeded fixture and passes
+the clean twin; the baseline round-trips; the repo itself lints clean.
+
+Stdlib-only (the linter never imports jax), so this file runs in tier-1.
+Fixtures live in ``tests/fixtures/lint/`` — one ``<rule>_bad.py`` +
+``<rule>_clean.py`` pair per rule; the ``fixtures`` path segment is
+excluded from normal lint collection because the bad halves violate on
+purpose.
+"""
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import (Baseline, Finding, apply_baseline, rule_ids)
+from repro.analysis.baseline import BaselinePolicyError
+from repro.analysis.findings import assign_occurrences
+from repro.analysis.lint import collect_files, lint_paths, main
+from repro.analysis.rules import run_rules
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+FIXDIR = REPO / "tests" / "fixtures" / "lint"
+ALL_RULES = rule_ids()
+
+
+def _lint_file(path: pathlib.Path):
+    return run_rules(path.as_posix(), path.read_text())
+
+
+# ---------------------------------------------------------------------------
+# per-rule golden fixtures
+# ---------------------------------------------------------------------------
+
+def test_every_rule_has_a_fixture_pair():
+    assert len(ALL_RULES) >= 8          # the ISSUE's floor
+    for rule in ALL_RULES:
+        stem = rule.lower()
+        assert (FIXDIR / f"{stem}_bad.py").exists(), rule
+        assert (FIXDIR / f"{stem}_clean.py").exists(), rule
+
+
+@pytest.mark.parametrize("rule", ALL_RULES)
+def test_rule_fires_on_seeded_violation(rule):
+    findings = _lint_file(FIXDIR / f"{rule.lower()}_bad.py")
+    fired = {f.rule for f in findings}
+    assert rule in fired, f"{rule} missed its seeded fixture"
+    # precision: a bad fixture trips ONLY its own rule
+    assert fired == {rule}, f"{rule} fixture also tripped {fired - {rule}}"
+
+
+@pytest.mark.parametrize("rule", ALL_RULES)
+def test_rule_passes_clean_twin(rule):
+    findings = _lint_file(FIXDIR / f"{rule.lower()}_clean.py")
+    assert findings == [], [f.format() for f in findings]
+
+
+def test_findings_carry_location_and_hint():
+    for f in _lint_file(FIXDIR / "trc001_bad.py"):
+        assert f.path.endswith("trc001_bad.py")
+        assert f.line > 0 and f.message and f.hint
+        assert f"{f.path}:{f.line}" in f.format()
+
+
+# ---------------------------------------------------------------------------
+# alias resolution + inline pragmas
+# ---------------------------------------------------------------------------
+
+def test_import_alias_does_not_dodge_rules():
+    src = ("import numpy as xyz\n"
+           "def f(n):\n"
+           "    return xyz.random.permutation(n)\n")
+    assert {f.rule for f in run_rules("x.py", src)} == {"DET001"}
+
+
+def test_inline_allow_suppresses_named_rule():
+    src = ("import jax\n"
+           "def sweep(f, xs):\n"
+           "    out = []\n"
+           "    for x in xs:\n"
+           "        # lint: allow(RCP001): one jit per swept config\n"
+           "        out.append(jax.jit(f)(x))\n"
+           "    return out\n")
+    assert run_rules("x.py", src) == []
+
+
+def test_inline_allow_cannot_suppress_det_or_pal():
+    src = ("import time\n"
+           "def f():\n"
+           "    return time.time()  # lint: allow(DET003)\n")
+    assert {f.rule for f in run_rules("x.py", src)} == {"DET003"}
+
+
+# ---------------------------------------------------------------------------
+# baseline round-trip
+# ---------------------------------------------------------------------------
+
+def test_baseline_round_trip(tmp_path):
+    bad = FIXDIR / "rcp001_bad.py"
+    findings = assign_occurrences(_lint_file(bad))
+    bl = Baseline.from_findings(findings)
+    p = tmp_path / "lint_baseline.json"
+    bl.save(p)
+
+    # baselined findings are suppressed...
+    new, suppressed, stale = apply_baseline(findings, Baseline.load(p))
+    assert new == [] and len(suppressed) == len(findings) and stale == []
+
+    # ...but a NEW violation still gates
+    extra = Finding(rule="RCP001", path=findings[0].path, line=99, col=0,
+                    message="m", hint="h", snippet="jax.jit(g)(x)")
+    new, suppressed, _ = apply_baseline(
+        assign_occurrences(findings + [extra]), Baseline.load(p))
+    assert [f.snippet for f in new] == ["jax.jit(g)(x)"]
+
+    # fixing the finding leaves a stale entry (baseline shrinks, never grows)
+    _, _, stale = apply_baseline([], Baseline.load(p))
+    assert len(stale) == len(findings)
+
+
+def test_baseline_fingerprint_survives_line_drift():
+    src = ("import time\n"
+           "def f():\n"
+           "    return time.time()\n")
+    drifted = "# a new header comment\n" + src
+    f0 = assign_occurrences(run_rules("x.py", src))[0]
+    f1 = assign_occurrences(run_rules("x.py", drifted))[0]
+    assert f0.line != f1.line and f0.fingerprint == f1.fingerprint
+
+
+def test_baseline_refuses_det_and_pal():
+    det = _lint_file(FIXDIR / "det003_bad.py")
+    with pytest.raises(BaselinePolicyError):
+        Baseline.from_findings(det)
+    pal = _lint_file(FIXDIR / "pal002_bad.py")
+    with pytest.raises(BaselinePolicyError):
+        Baseline.from_findings(pal)
+    # explicit override still possible (for forks with different policy)
+    assert len(Baseline.from_findings(det, allow_all=True).entries) == 2
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def test_cli_exit_codes(tmp_path):
+    bad = str(FIXDIR / "rcp001_bad.py")
+    clean = str(FIXDIR / "rcp001_clean.py")
+    assert main([clean, "--no-baseline"]) == 0
+    assert main([bad, "--no-baseline"]) == 1
+    assert main(["--list-rules", "."]) == 0
+    assert main([str(tmp_path / "missing_dir")]) == 2
+
+
+def test_cli_write_baseline_then_pass(tmp_path, capsys):
+    bad = str(FIXDIR / "rcp001_bad.py")
+    bl = str(tmp_path / "bl.json")
+    assert main([bad, "--write-baseline", "--baseline", bl]) == 0
+    assert main([bad, "--baseline", bl]) == 0
+    out = capsys.readouterr().out
+    assert "baselined" in out
+
+
+def test_cli_runs_as_module():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint", "--list-rules", "."],
+        capture_output=True, text=True, cwd=REPO,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"})
+    assert proc.returncode == 0
+    for rule in ALL_RULES:
+        assert rule in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# the repo itself
+# ---------------------------------------------------------------------------
+
+def test_fixture_dir_excluded_from_collection():
+    files = collect_files([str(REPO / "tests")])
+    assert not any("fixtures" in f.parts for f in files)
+
+
+def test_repo_lints_clean_without_baseline():
+    """src/benchmarks/examples carry ZERO findings — in particular no
+    DET/PAL debt (the acceptance bar: fixed, not suppressed)."""
+    findings, errors = lint_paths(
+        [str(REPO / "src"), str(REPO / "benchmarks"), str(REPO / "examples")],
+        root=REPO)
+    assert errors == []
+    assert findings == [], "\n".join(f.format() for f in findings)
+
+
+def test_committed_baseline_is_empty():
+    bl = Baseline.load(REPO / "lint_baseline.json")
+    assert bl.entries == []

@@ -1,0 +1,150 @@
+"""RecompileSanitizer: declared XLA-compilation budgets, unit + end-to-end.
+
+The end-to-end case is the compile-count regression the ISSUE asks for: a
+20-step Session run must compile its train step EXACTLY once — a second
+compilation means a shape/dtype leaked into the traced signature.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import RecompileBudgetError, RecompileSanitizer
+from repro.configs.base import ArchConfig
+from repro.data.synthetic_atoms import generate_all
+from repro.engine import Session, SessionConfig, ShardingPlan, make_step
+from repro.engine import TrainState, build_model
+from repro.optim import adamw
+
+
+class FakeJit:
+    """A cache-size seam without jax — the ``CompiledStep.cache_size``
+    duck type."""
+
+    def __init__(self, n=0):
+        self.n = n
+
+    def cache_size(self):
+        return self.n
+
+
+def _gfm_cfg():
+    return ArchConfig(name="g", family="gnn", gnn_hidden=24, gnn_layers=2,
+                      n_species=64, head_hidden=12, head_layers=2,
+                      remat=False, compute_dtype=jnp.float32)
+
+
+def _gfm_sources(n=24, n_tasks=3):
+    data = generate_all(n, max_atoms=10, max_edges=40,
+                        sources=["ani1x", "qm7x", "mptrj"][:n_tasks])
+    return [dict(species=s.species, pos=s.pos, edge_src=s.edge_src,
+                 edge_dst=s.edge_dst, node_mask=s.node_mask,
+                 edge_mask=s.edge_mask, energy=s.energy, forces=s.forces)
+            for s in data.values()]
+
+
+# ---------------------------------------------------------------------------
+# unit: the probe + budget accounting
+# ---------------------------------------------------------------------------
+
+def test_counts_cache_growth_since_tracking():
+    fn = FakeJit(n=3)                       # warmed up before tracking
+    san = RecompileSanitizer(budget=1)
+    assert san.track(fn, "step")
+    assert san.compilations() == 0          # pre-existing compiles don't count
+    fn.n = 4
+    assert san.compilations() == 1
+    san.check()                             # at budget: fine
+    fn.n = 5
+    with pytest.raises(RecompileBudgetError, match="step=2"):
+        san.check()
+
+
+def test_untracked_objects_are_reported():
+    san = RecompileSanitizer(budget=0)
+    assert not san.track(object())          # no seam -> not tracked
+    assert san.report() == {}
+
+
+def test_context_manager_checks_on_clean_exit():
+    fn = FakeJit()
+    with pytest.raises(RecompileBudgetError):
+        with RecompileSanitizer(budget=0, label="unit") as san:
+            san.track(fn)
+            fn.n = 1
+    # an in-flight exception wins over the budget check
+    with pytest.raises(KeyError):
+        with RecompileSanitizer(budget=0) as san:
+            san.track(fn)
+            fn.n = 2
+            raise KeyError("boom")
+
+
+def test_tracks_raw_jax_jit_cache():
+    @jax.jit
+    def f(x):
+        return x * 2
+
+    san = RecompileSanitizer(budget=1)
+    assert san.track(f, "f")
+    f(jnp.ones((4,)))
+    f(jnp.ones((4,)))                       # cache hit
+    assert san.compilations() == 1
+    san.check()
+    f(jnp.ones((5,)))                       # shape churn -> second compile
+    with pytest.raises(RecompileBudgetError, match="f=2"):
+        san.check()
+
+
+def test_tracks_compiled_step_seam():
+    cfg = _gfm_cfg()
+    from repro.core import MTPConfig, make_gfm_mtl
+    from repro.data.loader import GroupBatcher
+    model = make_gfm_mtl(cfg, 3)
+    plan = ShardingPlan(mtp=MTPConfig(n_tasks=3), donate=False)
+    step = plan.compile(make_step(model, adamw(1e-3), plan))
+    assert step.cache_size() == 0           # lazy: nothing compiled yet
+    san = RecompileSanitizer(budget=1)
+    assert san.track(step, "step")
+    gb = GroupBatcher(_gfm_sources(), 8)
+    state = TrainState.create(model.init(jax.random.PRNGKey(0)), adamw(1e-3))
+    state, _ = step(state, gb.next_batch())
+    state, _ = step(state, gb.next_batch())
+    assert san.compilations() == 1
+    san.check()
+
+
+# ---------------------------------------------------------------------------
+# end to end: the 20-step Session compile-count regression
+# ---------------------------------------------------------------------------
+
+def test_session_20_steps_compile_once():
+    """Fixed-shape GroupBatcher batches must hit one executable: 20 steps,
+    budget 1 (the single lazy-jit build). More means a recompile leak."""
+    scfg = SessionConfig(model="gfm-mtl", arch=_gfm_cfg(), steps=20,
+                         batch_per_task=8, lr=3e-3, verbose=False)
+    sess = Session.from_config(scfg, sources=_gfm_sources(),
+                               task_names=["a", "b", "c"])
+    with RecompileSanitizer(budget=1, label="20-step session") as san:
+        san.track_session(sess)
+        res = sess.run()
+    assert np.isfinite(res.final_loss) and int(res.state.step) == 20
+    assert san.compilations() == 1, san.report()
+
+
+def test_track_session_sees_rebuilt_step():
+    """The live probe must count compiles of a step REBUILT mid-run (the
+    quarantine path swaps Session.compiled_step for a new object)."""
+    scfg = SessionConfig(model="gfm-mtl", arch=_gfm_cfg(), steps=2,
+                         batch_per_task=8, lr=3e-3, verbose=False)
+    sess = Session.from_config(scfg, sources=_gfm_sources(),
+                               task_names=["a", "b", "c"])
+    san = RecompileSanitizer(budget=1)
+    san.track_session(sess)
+    sess.run()
+    assert san.compilations() == 1
+    sess.quarantine_tasks([2])              # rebuilds + recompiles the step
+    sess.run()
+    assert san.compilations() == 2
+    with pytest.raises(RecompileBudgetError):
+        san.check()

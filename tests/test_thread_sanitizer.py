@@ -1,0 +1,235 @@
+"""ThreadSanitizer-style contract tests for the threaded layers.
+
+Marked ``sanitizer`` (deselected from tier-1, run by the CI chaos-soak
+job): the instrumentation patches bound methods and swaps ``__class__``,
+which is test-only overhead. The contracts under test are the ones the
+docstrings promise but no numeric test can see breaking:
+
+  * ``data.prefetch.Prefetcher`` — exactly one producer draws from the
+    wrapped batcher at a time, across restore() generations (the bitwise
+    batch-replay guarantee);
+  * ``serve.queue.RequestQueue`` — one engine worker drains the queue;
+  * lock-guarded shared state is only touched while holding the lock.
+"""
+import threading
+
+import pytest
+
+from repro.analysis import (ThreadContractViolation, ThreadSanitizer,
+                            TrackedLock)
+from repro.data.bucketing import BucketSpec
+from repro.data.prefetch import Prefetcher
+from repro.serve.queue import RequestQueue
+
+pytestmark = pytest.mark.sanitizer
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+def test_tracked_lock_ownership():
+    lock = TrackedLock()
+    assert not lock.held()
+    with lock:
+        assert lock.held()
+        with lock:                       # reentrant bookkeeping
+            assert lock.held()
+        assert lock.held()
+        seen = []
+        t = threading.Thread(target=lambda: seen.append(lock.held()))
+        t.start()
+        t.join()
+        assert seen == [False]           # held() means held by THIS thread
+    assert not lock.held()
+
+
+class Counter:
+    def __init__(self):
+        self.n = 0
+
+    def bump(self):
+        self.n += 1
+
+
+def test_guard_attrs_seeded_violation_and_clean():
+    lock = TrackedLock()
+    san = ThreadSanitizer()
+    c = san.guard_attrs(Counter(), ("n",), lock)
+    with lock:
+        c.bump()                         # guarded access: fine
+    san.check()
+    c.bump()                             # unguarded read+write of n
+    with pytest.raises(ThreadContractViolation) as ei:
+        san.check()
+    kinds = {v.kind for v in ei.value.violations}
+    assert kinds == {"unguarded-read", "unguarded-write"}
+    assert all(v.target == "Counter.n" for v in ei.value.violations)
+
+
+class SlowWorker:
+    """work() holds both callers inside simultaneously via the barrier —
+    deterministic overlap, no sleeps."""
+
+    def __init__(self, barrier):
+        self.barrier = barrier
+
+    def work(self):
+        self.barrier.wait(timeout=5)
+
+
+def test_mutual_exclusion_detects_concurrent_entry():
+    san = ThreadSanitizer()
+    w = san.wrap_mutual_exclusion(SlowWorker(threading.Barrier(2)), ("work",))
+    ts = [threading.Thread(target=w.work) for _ in range(2)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    with pytest.raises(ThreadContractViolation, match="concurrent-entry"):
+        san.check()
+
+
+def test_mutual_exclusion_allows_sequential_and_reentrant():
+    san = ThreadSanitizer()
+
+    class W:
+        def a(self):
+            self.b()                     # same-thread re-entry into the group
+
+        def b(self):
+            pass
+
+    w = san.wrap_mutual_exclusion(W(), ("a", "b"))
+    w.a()                                # reentrant
+    t = threading.Thread(target=w.a)     # a LATER thread (new generation)
+    t.start()
+    t.join()
+    san.check()
+
+
+# ---------------------------------------------------------------------------
+# Prefetcher: single-producer contract across restore generations
+# ---------------------------------------------------------------------------
+
+class CountBatcher:
+    def __init__(self):
+        self.i = 0
+
+    def next_batch(self):
+        self.i += 1
+        return {"i": self.i}
+
+    def state(self):
+        return {"i": self.i}
+
+    def restore(self, st):
+        self.i = st["i"]
+
+
+def test_prefetcher_single_producer_through_restore():
+    san = ThreadSanitizer()
+    batcher = san.wrap_mutual_exclusion(CountBatcher(), ("next_batch",),
+                                        group="prefetch-producer")
+    with Prefetcher(batcher, depth=2) as pf:
+        first = [pf.next_batch()["i"] for _ in range(3)]
+        snap = pf.state()
+        more = [pf.next_batch()["i"] for _ in range(2)]
+        pf.restore(snap)                 # halts producer, starts generation 2
+        replay = [pf.next_batch()["i"] for _ in range(2)]
+        assert replay == more            # bitwise replay of the stream
+        assert first == [1, 2, 3]
+        assert pf.generation == 2        # restore started producer gen 2
+    san.check()                          # draws never overlapped
+
+
+def test_prefetcher_contract_catches_second_producer():
+    """A rogue second thread drawing from the SAME batcher while the
+    prefetcher's producer runs is exactly what the contract forbids."""
+    san = ThreadSanitizer()
+    barrier = threading.Barrier(2)
+
+    class BlockingBatcher(CountBatcher):
+        def next_batch(self):
+            if self.i < 2:               # pin the FIRST two drawers inside
+                try:
+                    barrier.wait(timeout=5)
+                except threading.BrokenBarrierError:
+                    pass
+            return super().next_batch()
+
+    batcher = san.wrap_mutual_exclusion(BlockingBatcher(), ("next_batch",),
+                                        group="prefetch-producer")
+    with Prefetcher(batcher, depth=1) as pf:
+        rogue = threading.Thread(target=batcher.next_batch)
+        rogue.start()                    # overlaps the producer's draw
+        rogue.join()
+        pf.next_batch()
+    with pytest.raises(ThreadContractViolation, match="prefetch-producer"):
+        san.check()
+
+
+# ---------------------------------------------------------------------------
+# RequestQueue: single-worker drain contract
+# ---------------------------------------------------------------------------
+
+def _sample(n=3):
+    import numpy as np
+    return {"species": np.ones(n, np.int32),
+            "pos": np.zeros((n, 3), np.float32)}
+
+
+def _queue(**kw):
+    return RequestQueue(BucketSpec((8,), (16,)), depth=8, **kw)
+
+
+def test_request_queue_single_worker_drain_clean():
+    san = ThreadSanitizer()
+    q = _queue()
+    futures = [q.submit(_sample()) for _ in range(4)]
+    san.wrap_mutual_exclusion(q, ("get", "drain"), group="engine-worker")
+
+    def worker():
+        while (req := q.get(timeout=0.05)) is not None:
+            req.future.set_result({"ok": True})
+
+    t = threading.Thread(target=worker)
+    t.start()
+    t.join()
+    assert all(f.result(timeout=1)["ok"] for f in futures)
+    san.check()                          # one worker: no overlap
+
+
+def test_request_queue_two_workers_draining_violate():
+    san = ThreadSanitizer()
+    q = _queue()
+    san.wrap_mutual_exclusion(q, ("get", "drain"), group="engine-worker")
+    start = threading.Barrier(2)
+
+    def worker():
+        start.wait(timeout=5)
+        q.get(timeout=0.5)               # empty queue: both block inside get
+
+    ts = [threading.Thread(target=worker) for _ in range(2)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    with pytest.raises(ThreadContractViolation, match="engine-worker"):
+        san.check()
+
+
+def test_request_queue_concurrent_submit_is_allowed():
+    """submit() is the thread-safe side — many submitters is NOT a
+    violation; only the drain side is single-worker."""
+    san = ThreadSanitizer()
+    q = _queue()
+    san.wrap_mutual_exclusion(q, ("get", "drain"), group="engine-worker")
+    ts = [threading.Thread(target=q.submit, args=(_sample(),))
+          for _ in range(4)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert len(q.drain()) == 4           # main thread drains, sequentially
+    san.check()
