@@ -129,6 +129,17 @@ def make_spec_fn(cfg, mesh: Mesh | None = None):
     return spec_fn
 
 
+def hier_batch_spec(leaf, n_devices: int, axis: str = "data") -> P:
+    """Spec for one leaf of a GROUP's batch slice (k_g, B, ...) on a 1-axis
+    group mesh: the per-group head dim stays replicated, B shards over the
+    group's data axis — replicate entirely when B doesn't tile evenly (ragged
+    per-head batches; jit in_shardings require even tiling)."""
+    nd = leaf.ndim
+    if nd < 2 or leaf.shape[1] % max(n_devices, 1) != 0:
+        return P(*([None] * nd))
+    return P(None, axis, *([None] * (nd - 2)))
+
+
 def tree_shardings(mesh: Mesh, tree, spec_fn):
     """NamedSharding pytree for a params pytree / eval_shape tree."""
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)

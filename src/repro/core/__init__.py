@@ -1,5 +1,7 @@
 from .taskpar import (MTPConfig, MultiTaskModel, batch_shardings,  # noqa: F401
-                      head_pspec, memory_per_device,
-                      mtp_value_and_grad_shardmap, param_shardings)
+                      HeadPlacement, head_pspec, memory_per_device,
+                      mtp_value_and_grad_shardmap, param_shardings,
+                      round_robin_placement)
+from .balancing import solve_placement  # noqa: F401
 from .mtl import make_gfm_mtl, make_lm_multitask, gfm_eval_fn, softmax_xent  # noqa: F401
 from . import balancing  # noqa: F401

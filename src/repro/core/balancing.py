@@ -56,6 +56,135 @@ def align_sources(per_source: list[dict], n_species: int) -> list[dict]:
 
 
 # ---------------------------------------------------------------------------
+# Imbalance-aware head placement (hierarchical multi-task parallelism)
+# ---------------------------------------------------------------------------
+
+def solve_placement(n_devices: int, loads, *, seed: int = 0,
+                    refine_iters: int = 64):
+    """Assign heads to device groups so the bottleneck device is as idle as
+    possible: minimize ``max_g Σ_{t∈g} load_t / n_g`` — the modeled per-
+    device load of the busiest group, which IS the step time on hardware
+    where groups run concurrently.
+
+    ``loads`` is the per-head load model — use the measured per-source
+    batch mix (``repro.data.mixing.mix_weights`` over source sizes): under
+    proportional sampling a head's per-step sample count is its source's
+    mixture share, so mix weights are per-head work.
+
+    Two regimes, both deterministic for a fixed ``seed``:
+
+      * ``n_devices >= n_heads`` — one group per head; devices are dealt by
+        greedy water-filling (each spare device goes to the currently
+        busiest group), then a seeded local search tries single-device
+        moves between groups.
+      * ``n_heads > n_devices`` — one single-device group per device; heads
+        are packed LPT-style (heaviest first onto the least-loaded group),
+        then the local search tries single-head moves and pairwise swaps.
+
+    The result is guaranteed no worse than ``round_robin_placement`` on the
+    modeled max-group load: the solver evaluates the round-robin baseline
+    and keeps whichever wins (ties go to the solver's own layout).
+    """
+    from .taskpar import HeadPlacement, round_robin_placement
+
+    w = np.asarray([float(x) for x in loads], np.float64)
+    assert w.ndim == 1 and w.size >= 1, f"bad loads {loads!r}"
+    assert (w >= 0).all() and w.sum() > 0, \
+        f"loads must be non-negative with a positive sum, got {w}"
+    w = w / w.sum()
+    n_heads = w.size
+    assert n_devices >= 1, f"n_devices must be >= 1, got {n_devices}"
+    rng = np.random.default_rng(seed)
+
+    if n_devices >= n_heads:
+        groups = [(t,) for t in range(n_heads)]
+        counts = np.ones(n_heads, np.int64)
+        for _ in range(n_devices - n_heads):      # greedy water-filling
+            counts[int(np.argmax(w / counts))] += 1
+        # local search: move one device from a donor to the bottleneck
+        for _ in range(refine_iters):
+            per_dev = w / counts
+            hot = int(np.argmax(per_dev))
+            donors = [g for g in range(n_heads)
+                      if counts[g] > 1 and g != hot
+                      and w[g] / (counts[g] - 1) < per_dev[hot]]
+            if not donors:
+                break
+            donor = donors[int(rng.integers(len(donors)))]
+            counts[donor] -= 1
+            counts[hot] += 1
+        placed = HeadPlacement(groups=tuple(groups),
+                               device_counts=tuple(int(c) for c in counts),
+                               loads=tuple(w))
+    else:
+        # more heads than devices: every group is one device; pack heads
+        # LPT — heaviest head onto the least-loaded group
+        group_heads = [[] for _ in range(n_devices)]
+        gload = np.zeros(n_devices, np.float64)
+        order = np.argsort(-w, kind="stable")
+        for t in order:
+            # ties (e.g. zero-load heads) break toward the emptiest group so
+            # every device ends up owning at least one head
+            g = min(range(n_devices),
+                    key=lambda i: (gload[i], len(group_heads[i]), i))
+            group_heads[g].append(int(t))
+            gload[g] += w[t]
+        # local search: single-head moves + pairwise swaps
+        for _ in range(refine_iters):
+            hot = int(np.argmax(gload))
+            best = None   # (new_max, kind, payload)
+            cur = gload[hot]
+            for t in group_heads[hot]:
+                if len(group_heads[hot]) > 1:     # never strand a device
+                    for g in range(n_devices):
+                        if g == hot:
+                            continue
+                        new_max = max(cur - w[t], gload[g] + w[t])
+                        if new_max < cur and (best is None
+                                              or new_max < best[0]):
+                            best = (new_max, "move", (t, g))
+                for g in range(n_devices):
+                    if g == hot:
+                        continue
+                    for u in group_heads[g]:
+                        if w[t] <= w[u]:
+                            continue
+                        new_max = max(cur - w[t] + w[u],
+                                      gload[g] + w[t] - w[u])
+                        if new_max < cur and (best is None or
+                                              new_max < best[0]):
+                            best = (new_max, "swap", (t, hot, u, g))
+            if best is None:
+                break
+            if best[1] == "move":
+                t, g = best[2]
+                group_heads[hot].remove(t)
+                group_heads[g].append(t)
+                gload[hot] -= w[t]
+                gload[g] += w[t]
+            else:
+                t, gh, u, g = best[2]
+                group_heads[gh].remove(t)
+                group_heads[g].remove(u)
+                group_heads[gh].append(u)
+                group_heads[g].append(t)
+                gload[gh] += w[u] - w[t]
+                gload[g] += w[t] - w[u]
+        assert all(group_heads), "internal: a device group lost all heads"
+        group_heads = [sorted(g) for g in group_heads]
+        placed = HeadPlacement(groups=tuple(tuple(g) for g in group_heads),
+                               device_counts=(1,) * len(group_heads),
+                               loads=tuple(w))
+
+    rr = round_robin_placement(n_heads, n_devices)
+    if rr.max_group_load(tuple(w)) < placed.max_group_load():
+        placed = HeadPlacement(groups=rr.groups,
+                               device_counts=rr.device_counts,
+                               loads=tuple(w))
+    return placed
+
+
+# ---------------------------------------------------------------------------
 # Loss weighting
 # ---------------------------------------------------------------------------
 

@@ -117,6 +117,101 @@ def memory_per_device(p_shared: int, p_head: int, n_heads: int, mode: str) -> in
 
 
 # ---------------------------------------------------------------------------
+# Hierarchical placement vocabulary (data-parallel replicas x per-head
+# model shards): heads -> device groups, possibly UNEVEN — the Exascale
+# follow-up's point is that imbalanced multi-fidelity batch mixes make
+# uneven head-to-device assignment the thing that matters at scale.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class HeadPlacement:
+    """Head -> device-group assignment for the hierarchical backend.
+
+    ``groups[g]`` is the tuple of head indices owned by group g;
+    ``device_counts[g]`` is how many devices group g gets. Groups partition
+    BOTH the heads (every head in exactly one group) and the device pool
+    (counts sum to ``n_devices``). Within a group the batch is data-parallel
+    over the group's devices and the group's head slice is resident only
+    there — memory per device is ``P_s + Σ_{t∈g} P_h(t)``, the paper's
+    §4.3 number when groups hold one head each.
+
+    ``loads`` optionally records the per-head load model the placement was
+    solved against (``repro.data.mixing`` weights); it is bookkeeping only.
+    """
+    groups: tuple                  # ((head, ...), ...) — disjoint, exhaustive
+    device_counts: tuple           # devices per group, all >= 1
+    loads: tuple | None = None     # per-head load model used by the solver
+
+    def __post_init__(self):
+        groups = tuple(tuple(int(h) for h in g) for g in self.groups)
+        counts = tuple(int(c) for c in self.device_counts)
+        object.__setattr__(self, "groups", groups)
+        object.__setattr__(self, "device_counts", counts)
+        assert len(groups) == len(counts), \
+            f"{len(groups)} groups vs {len(counts)} device counts"
+        assert all(c >= 1 for c in counts), f"empty device group: {counts}"
+        assert all(len(g) >= 1 for g in groups), f"headless group: {groups}"
+        flat = [h for g in groups for h in g]
+        assert sorted(flat) == list(range(len(flat))), \
+            f"groups must partition heads 0..{len(flat) - 1}, got {groups}"
+        if self.loads is not None:
+            loads = tuple(float(x) for x in self.loads)
+            object.__setattr__(self, "loads", loads)
+            assert len(loads) == len(flat), \
+                f"{len(loads)} loads for {len(flat)} heads"
+
+    @property
+    def n_heads(self) -> int:
+        return sum(len(g) for g in self.groups)
+
+    @property
+    def n_groups(self) -> int:
+        return len(self.groups)
+
+    @property
+    def n_devices(self) -> int:
+        return sum(self.device_counts)
+
+    def group_of(self, head: int) -> int:
+        for g, heads in enumerate(self.groups):
+            if head in heads:
+                return g
+        raise KeyError(head)
+
+    def group_loads(self, loads=None) -> tuple:
+        """Modeled per-DEVICE load of each group: Σ_{t∈g} load_t / n_g.
+        ``loads`` defaults to the solver's recorded load model (uniform if
+        none was recorded)."""
+        w = self.loads if loads is None else tuple(float(x) for x in loads)
+        if w is None:
+            w = (1.0,) * self.n_heads
+        assert len(w) == self.n_heads, f"{len(w)} loads for {self.n_heads} heads"
+        return tuple(sum(w[t] for t in g) / c
+                     for g, c in zip(self.groups, self.device_counts))
+
+    def max_group_load(self, loads=None) -> float:
+        """The placement's modeled bottleneck: max per-device group load —
+        the quantity the solver minimizes and the step-time model on real
+        (non-oversubscribed) hardware."""
+        return max(self.group_loads(loads))
+
+
+def round_robin_placement(n_heads: int, n_devices: int) -> HeadPlacement:
+    """The load-blind baseline: heads dealt cyclically over
+    ``min(n_heads, n_devices)`` groups, devices dealt cyclically over the
+    same groups — even-as-possible sizes, no regard for per-head load."""
+    assert n_heads >= 1 and n_devices >= 1
+    n_groups = min(n_heads, n_devices)
+    groups = [[] for _ in range(n_groups)]
+    for t in range(n_heads):
+        groups[t % n_groups].append(t)
+    counts = [n_devices // n_groups + (1 if g < n_devices % n_groups else 0)
+              for g in range(n_groups)]
+    return HeadPlacement(groups=tuple(tuple(g) for g in groups),
+                         device_counts=tuple(counts))
+
+
+# ---------------------------------------------------------------------------
 # shard_map explicit-collective formulation (paper-verbatim psum scopes)
 # ---------------------------------------------------------------------------
 

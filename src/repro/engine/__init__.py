@@ -39,10 +39,11 @@ The input pipeline is checkpointable end to end: ``Session.run`` writes a
 docs/data.md).
 """
 from .state import StepOutput, TrainState  # noqa: F401
-from .step import (SingleTaskModel, TrainStep, make_grad_fn,  # noqa: F401
-                   make_step, make_train_step, multitask_grad_fn,
-                   normalized_task_weights, shardmap_grad_fn, single_grad_fn,
-                   with_grad_accum)
+from .step import (HierStepSpec, SingleTaskModel, TrainStep,  # noqa: F401
+                   make_grad_fn, make_step, make_train_step,
+                   multitask_grad_fn, normalized_task_weights,
+                   shardmap_grad_fn, single_grad_fn, with_grad_accum)
 from .plan import CompiledStep, ShardingPlan  # noqa: F401
+from .hier import HierCompiledStep  # noqa: F401
 from .registry import available_models, build_model, register_model  # noqa: F401
 from .session import Session, SessionConfig, SessionResult  # noqa: F401

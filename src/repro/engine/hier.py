@@ -1,0 +1,259 @@
+"""Hierarchical multi-task parallelism — data-parallel replicas x per-head
+model shards (the paper's §4.3–4.4 process sub-groups, generalised to
+UNEVEN head-to-device assignment per the Exascale follow-up).
+
+A ``HeadPlacement`` (repro.core.taskpar) partitions the device pool into
+per-group 1-axis ``("data",)`` sub-meshes (launch/mesh.make_group_meshes):
+group g holds the trunk plus ONLY its heads' parameter slices, its batch
+slice is data-parallel over the group's devices, and groups run
+concurrently. The two collective scopes fall out structurally — head grads
+all-reduce inside the group's sub-mesh (XLA SPMD over the group mesh) and
+trunk partial-grads are summed ACROSS groups by the combine step, exactly
+the paper's "local DDP for heads, global all-reduce for the trunk".
+
+Numerics are the flat path's, by construction: each group's partial loss
+uses the GLOBAL normalized task-weight slice (``w = tw[heads]``, NOT
+re-normalized within the group), so
+
+    Σ_g Σ_{t∈g} ŵ_t L_t  ==  Σ_t ŵ_t L_t   (summation order only)
+
+and per-task losses / head grads are scattered back by head index. The
+cross-plan parity suite (tests/test_parallel_parity.py) pins hier vs flat
+pjit vs single-device jit to fp32 tolerance.
+
+``HierCompiledStep`` is the ``plan.compile()`` product for
+``backend="hier"``: one lazily-jitted executable per (heads, devices)
+group plus one parameter-update executable, exposed via ``functions()`` /
+``cache_size()`` for ``repro.analysis.RecompileSanitizer``. A placement
+change (``update_placement``) re-jits exactly the groups whose (heads,
+devices) key changed — untouched groups and the update step are reused.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.sharding import hier_batch_spec
+from repro.launch.mesh import make_group_meshes
+
+from .state import StepOutput, TrainState
+from .step import normalized_task_weights, with_grad_accum
+
+
+def _take_heads(leaf, heads):
+    """Slice a leading per-task dim at the group's head indices. Works on
+    concrete arrays and on ShapeDtypeStruct templates (dry-run lowering)."""
+    if isinstance(leaf, jax.ShapeDtypeStruct):
+        return jax.ShapeDtypeStruct((len(heads),) + tuple(leaf.shape[1:]),
+                                    leaf.dtype)
+    return leaf[np.asarray(heads)]
+
+
+def _slice_batch(batch, heads, n_tasks):
+    """Group view of a task-major batch: leaves with a leading (n_tasks,)
+    dim are sliced at the group's heads; anything else (flat side-channel
+    leaves) is passed through whole."""
+    def take(leaf):
+        shape = tuple(leaf.shape)
+        if len(shape) >= 1 and shape[0] == n_tasks:
+            return _take_heads(leaf, heads)
+        return leaf
+    return jax.tree_util.tree_map(take, batch)
+
+
+class HierCompiledStep:
+    """Compiled step for hierarchical plans; see module docstring.
+
+    Call signature matches ``CompiledStep``: ``(state, batch) -> (state,
+    StepOutput)`` over the GLOBAL state and task-major batch — slicing,
+    group dispatch, and the combine are internal. Parameters are re-placed
+    onto each group mesh per call (host-mesh repro; a production port keeps
+    them resident per group).
+    """
+
+    def __init__(self, plan, spec):
+        from .step import HierStepSpec
+        assert isinstance(spec, HierStepSpec), (
+            "backend='hier' compiles the HierStepSpec returned by "
+            f"make_step(model, optimizer, plan) — got {type(spec).__name__}")
+        assert plan.placement is not None, "hier plan needs a placement"
+        self.plan = plan
+        self.spec = spec
+        self.placement = plan.placement
+        self.n_tasks = self.placement.n_heads
+        model_tasks = getattr(spec.model, "n_tasks", 0)
+        assert model_tasks in (0, self.n_tasks), (
+            f"placement covers {self.n_tasks} heads but model "
+            f"'{spec.model.name}' has {model_tasks}")
+        self._tw = normalized_task_weights(self.n_tasks, spec.task_weights)
+        self._groups = {}      # (heads, device_ids) -> jitted group grad fn
+        self._update = None
+
+    # -- executable builders (lazy, cached) ---------------------------------
+
+    def _group_grad_fn(self, heads):
+        """Jitted ``(params_g, batch_g) -> (partial_loss, metrics, grads_g)``
+        for one group. The weight slice keeps the GLOBAL normalization so
+        group partials sum to the flat loss exactly."""
+        model, accum = self.spec.model, self.spec.accum
+        w = self._tw[np.asarray(heads)]
+
+        def grad_fn(params, batch):
+            def loss(p):
+                per_task, metrics = model.loss_fn(p["shared"], p["heads"],
+                                                  batch)
+                # quarantined (zero-weight) heads excluded by select, not
+                # multiplication — 0 * nan is still nan (cf. step.py)
+                return jnp.sum(jnp.where(w > 0, per_task * w, 0.0)), \
+                    (per_task, metrics)
+
+            (l, (per_task, metrics)), grads = \
+                jax.value_and_grad(loss, has_aux=True)(params)
+            return l, dict(metrics, per_task_loss=per_task), grads
+
+        return jax.jit(with_grad_accum(grad_fn, accum, axis=1))
+
+    def _get_group(self, heads, gmesh):
+        key = (tuple(heads), tuple(d.id for d in gmesh.devices.flat))
+        fn = self._groups.get(key)
+        if fn is None:
+            # old entries are kept: flipping a placement back reuses them,
+            # and RecompileSanitizer.track_session holds every fn it saw
+            fn = self._groups[key] = self._group_grad_fn(heads)
+        return fn
+
+    def _get_update(self):
+        if self._update is None:
+            optimizer = self.spec.optimizer
+            donate = (0,) if self.plan.donate else ()
+
+            def update(state, grads):
+                new_params, new_opt = optimizer.update(
+                    grads, state.opt_state, state.params)
+                return TrainState(params=new_params, opt_state=new_opt,
+                                  step=state.step + 1, rng=state.rng)
+
+            self._update = jax.jit(update, donate_argnums=donate)
+        return self._update
+
+    # -- per-group placement -------------------------------------------------
+
+    def _group_inputs(self, params, batch, heads, gmesh, n_dev):
+        """(params_g, batch_g) placed on the group mesh: trunk + head slice
+        replicated, batch B sharded over the group's data axis (replicated
+        when ragged — hier_batch_spec)."""
+        pg = {"shared": params["shared"],
+              "heads": jax.tree_util.tree_map(
+                  lambda l: _take_heads(l, heads), params["heads"])}
+        bg = _slice_batch(batch, heads, self.n_tasks)
+        rep = NamedSharding(gmesh, P())
+        if any(isinstance(l, jax.ShapeDtypeStruct)
+               for l in jax.tree_util.tree_leaves(pg)):
+            # dry-run templates: attach shardings instead of placing
+            pg = jax.tree_util.tree_map(
+                lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=rep),
+                pg)
+            bg = jax.tree_util.tree_map(
+                lambda l: jax.ShapeDtypeStruct(
+                    l.shape, l.dtype,
+                    sharding=NamedSharding(gmesh,
+                                           hier_batch_spec(l, n_dev))), bg)
+            return pg, bg
+        pg = jax.device_put(pg, jax.tree_util.tree_map(lambda _: rep, pg))
+        bg = jax.device_put(bg, jax.tree_util.tree_map(
+            lambda l: NamedSharding(gmesh, hier_batch_spec(l, n_dev)), bg))
+        return pg, bg
+
+    # -- the step ------------------------------------------------------------
+
+    def __call__(self, state, batch):
+        placement = self.placement
+        meshes = make_group_meshes(placement)
+        params = state.params
+        results = []
+        for heads, gmesh, n_dev in zip(placement.groups, meshes,
+                                       placement.device_counts):
+            fn = self._get_group(heads, gmesh)
+            pg, bg = self._group_inputs(params, batch, heads, gmesh, n_dev)
+            results.append(fn(pg, bg))     # async dispatch — groups overlap
+        outs = jax.device_get(results)     # one readback for all groups
+
+        # combine: loss and trunk grads sum ACROSS groups (the global
+        # all-reduce scope); per-head leaves scatter by head index
+        loss = np.float32(sum(o[0] for o in outs))
+        metrics = self._scatter_metrics([o[1] for o in outs],
+                                        placement.groups)
+        trunk = jax.tree_util.tree_map(
+            lambda *ls: np.sum(np.stack([np.asarray(l) for l in ls]), axis=0),
+            *[o[2]["shared"] for o in outs])
+        head_grads = jax.tree_util.tree_map(
+            lambda *ls: self._scatter_heads(ls, placement.groups),
+            *[o[2]["heads"] for o in outs])
+        new_state = self._get_update()(state,
+                                       {"shared": trunk, "heads": head_grads})
+        return new_state, StepOutput(loss=loss, metrics=metrics)
+
+    def _scatter_heads(self, leaves, groups):
+        """Per-group (k_g, ...) leaves -> one (n_tasks, ...) leaf."""
+        l0 = np.asarray(leaves[0])
+        out = np.zeros((self.n_tasks,) + l0.shape[1:], l0.dtype)
+        for heads, leaf in zip(groups, leaves):
+            out[np.asarray(heads)] = np.asarray(leaf)
+        return out
+
+    def _scatter_metrics(self, mets, groups):
+        def combine(*leaves):
+            per_task = all(
+                np.asarray(l).ndim >= 1
+                and np.asarray(l).shape[0] == len(g)
+                for g, l in zip(groups, leaves))
+            if per_task:
+                return self._scatter_heads(leaves, groups)
+            return np.mean(np.stack([np.asarray(l) for l in leaves]), axis=0)
+        return jax.tree_util.tree_map(combine, *mets)
+
+    # -- placement changes ---------------------------------------------------
+
+    def update_placement(self, placement):
+        """Swap the head->group assignment in place. Groups whose (heads,
+        devices) key is unchanged keep their compiled executable; only the
+        affected groups re-jit on next call. The update executable is
+        untouched (global state layout is placement-independent)."""
+        assert placement.n_heads == self.n_tasks, (
+            f"new placement covers {placement.n_heads} heads, step has "
+            f"{self.n_tasks}")
+        self.placement = placement
+
+    # -- probe seams (RecompileSanitizer / dryrun) ---------------------------
+
+    def functions(self):
+        """Every executable built so far (all placements seen) plus the
+        update step — each exposes jit's ``_cache_size`` probe."""
+        fns = tuple(self._groups.values())
+        return fns + ((self._update,) if self._update is not None else ())
+
+    def cache_size(self) -> int:
+        """Total XLA compilations across group + update executables."""
+        total = 0
+        for fn in self.functions():
+            probe = getattr(fn, "_cache_size", None)
+            total += int(probe()) if callable(probe) else 0
+        return total
+
+    def lower_groups(self, state, batch):
+        """Per-group lowerings for dry-run analysis: ``[(heads, lowered)]``
+        from ShapeDtypeStruct (or concrete) templates of the GLOBAL state
+        and task-major batch."""
+        placement = self.placement
+        meshes = make_group_meshes(placement)
+        out = []
+        for heads, gmesh, n_dev in zip(placement.groups, meshes,
+                                       placement.device_counts):
+            fn = self._get_group(heads, gmesh)
+            pg, bg = self._group_inputs(state.params, batch, heads, gmesh,
+                                        n_dev)
+            out.append((tuple(heads), fn.lower(pg, bg)))
+        return out

@@ -23,10 +23,11 @@ from typing import Callable
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.taskpar import MTPConfig, batch_shardings, param_shardings
+from repro.core.taskpar import (HeadPlacement, MTPConfig, batch_shardings,
+                                param_shardings)
 from .state import StepOutput, TrainState
 
-BACKENDS = ("auto", "jit", "pjit", "shard_map")
+BACKENDS = ("auto", "jit", "pjit", "shard_map", "hier")
 
 
 def _is_multitask_params(params) -> bool:
@@ -37,21 +38,38 @@ def _is_multitask_params(params) -> bool:
 class ShardingPlan:
     mesh: Mesh | None = None
     mtp: MTPConfig | None = None
-    backend: str = "auto"                    # auto | jit | pjit | shard_map
+    backend: str = "auto"              # auto | jit | pjit | shard_map | hier
     shared_spec_fn: Callable | None = None   # trunk params (multitask layout)
     spec_fn: Callable | None = None          # flat params (single-task layout)
     donate: bool = True
+    # hierarchical backend: a HeadPlacement (heads -> uneven device groups,
+    # repro.core.solve_placement) INSTEAD of a mesh — the plan partitions
+    # the raw device pool into per-group sub-meshes itself
+    placement: HeadPlacement | None = None
 
     def __post_init__(self):
         assert self.backend in BACKENDS, f"backend '{self.backend}'"
         if self.backend in ("pjit", "shard_map"):
             assert self.mesh is not None, \
                 f"backend '{self.backend}' needs a mesh"
+        if self.backend == "hier":
+            assert self.placement is not None, \
+                "backend='hier' needs a placement (see repro.core." \
+                "solve_placement / round_robin_placement)"
+        if self.placement is not None:
+            assert self.mesh is None, \
+                "placement and mesh are exclusive — a hierarchical plan " \
+                "builds its own per-group sub-meshes from the device pool"
+            assert self.backend in ("auto", "hier"), \
+                f"placement needs backend 'auto' or 'hier', " \
+                f"got '{self.backend}'"
 
     @property
     def resolved_backend(self) -> str:
         if self.backend != "auto":
             return self.backend
+        if self.placement is not None:
+            return "hier"
         return "jit" if self.mesh is None else "pjit"
 
     # -- sharding trees ----------------------------------------------------
@@ -133,9 +151,18 @@ class ShardingPlan:
 
     # -- compilation -------------------------------------------------------
 
-    def compile(self, step) -> "CompiledStep":
+    def compile(self, step):
         """The one public way to build a compiled step. Works for concrete
-        arrays and for ShapeDtypeStruct templates (``.lower`` for dry-runs)."""
+        arrays and for ShapeDtypeStruct templates (``.lower`` for dry-runs).
+        Hierarchical plans take the ``HierStepSpec`` from ``make_step`` and
+        return a ``HierCompiledStep`` (same call signature)."""
+        from .step import HierStepSpec
+        if self.resolved_backend == "hier":
+            from .hier import HierCompiledStep
+            return HierCompiledStep(self, step)
+        assert not isinstance(step, HierStepSpec), (
+            f"a HierStepSpec can only be compiled by a hier plan "
+            f"(this plan resolves to '{self.resolved_backend}')")
         return CompiledStep(self, step)
 
 

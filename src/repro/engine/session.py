@@ -72,6 +72,13 @@ class SessionConfig:
     # bucket grid from the session's sources) — batches are re-padded down
     # to the smallest bucket shape holding their content.
     bucketing: Any = None
+    # hierarchical multi-task parallelism (docs/parallelism.md): assign
+    # heads to UNEVEN device groups, load-balanced by the mixing weights
+    # (the measured per-source batch mix) as the per-head load model.
+    # None = flat plans (legacy). An int n = solve over n devices; "auto"
+    # = solve over every host device; an explicit HeadPlacement is used
+    # as-is. Exclusive with passing a mesh to Session.
+    placement: Any = None
     # misc
     seed: int = 0
     task_weights: tuple | None = None
@@ -105,6 +112,27 @@ def _as_mixing(mixing) -> MixingConfig | None:
         return MixingConfig(weights=tuple(mixing))
     raise TypeError(f"cfg.mixing: expected MixingConfig | float temperature "
                     f"| weight tuple | None, got {type(mixing).__name__}")
+
+
+def _resolve_placement(placement, n_tasks, loads, seed):
+    """SessionConfig.placement shorthands -> HeadPlacement (int n / "auto"
+    run the imbalance-aware solver over n / all host devices)."""
+    from repro.core.balancing import solve_placement
+    from repro.core.taskpar import HeadPlacement
+    if isinstance(placement, HeadPlacement):
+        assert placement.n_heads == n_tasks, (
+            f"placement covers {placement.n_heads} heads, session has "
+            f"{n_tasks} tasks")
+        return placement
+    if isinstance(placement, bool):   # bool IS int — reject the likely typo
+        raise TypeError("cfg.placement=True/False is ambiguous — pass a "
+                        "device count, \"auto\", or a HeadPlacement")
+    if placement == "auto":
+        return solve_placement(len(jax.devices()), loads, seed=seed)
+    if isinstance(placement, int):
+        return solve_placement(placement, loads, seed=seed)
+    raise TypeError(f"cfg.placement: expected HeadPlacement | int device "
+                    f"count | \"auto\" | None, got {type(placement).__name__}")
 
 
 def _as_bucket_spec(bucketing, sources, batcher) -> BucketSpec:
@@ -243,8 +271,29 @@ class Session:
                 if mesh is not None else ("data",)
             mtp = MTPConfig(n_tasks=n_tasks, mode=cfg.mode,
                             data_axes=data_axes)
+        placement = None
+        if cfg.placement is not None:
+            assert mesh is None, \
+                "cfg.placement and an explicit mesh are exclusive — the " \
+                "hierarchical plan partitions the device pool itself"
+            assert multitask, \
+                "cfg.placement shards per-task heads — needs a multi-task " \
+                "model"
+            if cfg.resilience is not None and \
+                    getattr(cfg.resilience, "guard", None) is not None:
+                raise NotImplementedError(
+                    "guarded stepping (resilience.guard) is not supported "
+                    "on the hierarchical backend yet — drop cfg.placement "
+                    "or the guard")
+            # the solver's load model: the measured per-source batch mix —
+            # for multi-task sessions the mixing weights already landed in
+            # task_weights above; uniform when neither is set
+            loads = tuple(task_weights) if task_weights is not None \
+                else (1.0,) * n_tasks
+            placement = _resolve_placement(cfg.placement, n_tasks, loads,
+                                           cfg.seed)
         self.plan = ShardingPlan(mesh=mesh, mtp=mtp, backend=cfg.backend,
-                                 donate=cfg.donate)
+                                 donate=cfg.donate, placement=placement)
 
         if task_weights is not None and \
                 self.plan.resolved_backend == "shard_map":
@@ -312,8 +361,26 @@ class Session:
         """The session's compiled callables, re-read live — the probe seam
         for ``repro.analysis.RecompileSanitizer.track_session`` (a step
         rebuilt by quarantine replaces ``compiled_step``, so trackers must
-        not cache the object)."""
+        not cache the object). Hierarchical sessions surface the per-group
+        executables + the update step individually."""
+        fns = getattr(self.compiled_step, "functions", None)
+        if callable(fns):
+            return tuple(fns())
         return (self.compiled_step,)
+
+    def set_placement(self, placement):
+        """Swap a hierarchical session's head->device-group assignment in
+        place (same shorthands as ``cfg.placement``). Only group
+        executables whose (heads, devices) changed recompile — verified by
+        the RecompileSanitizer regression in tests/test_sanitizers.py."""
+        assert self.plan.resolved_backend == "hier", \
+            "set_placement needs a hierarchical session (cfg.placement)"
+        loads = tuple(self.task_weights) if self.task_weights is not None \
+            else (1.0,) * len(self.task_names)
+        placement = _resolve_placement(placement, len(self.task_names),
+                                       loads, self.cfg.seed)
+        self.plan = dataclasses.replace(self.plan, placement=placement)
+        self.compiled_step.update_placement(placement)
 
     def n_params(self) -> int:
         return sum(int(x.size) for x in

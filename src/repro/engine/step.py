@@ -42,6 +42,19 @@ class SingleTaskModel(NamedTuple):
     name: str = "single"
 
 
+class HierStepSpec(NamedTuple):
+    """The ``make_step`` product for hierarchical plans (backend="hier"):
+    not a callable — per-group executables depend on the plan's
+    ``HeadPlacement``, so step construction is deferred to
+    ``plan.compile()``, which builds a ``repro.engine.hier.HierCompiledStep``
+    from this spec. Carries exactly the ingredients the flat pipeline would
+    have consumed."""
+    model: Any
+    optimizer: Any
+    accum: int = 1
+    task_weights: Any = None
+
+
 def normalized_task_weights(n_tasks: int, task_weights=None) -> jnp.ndarray:
     tw = jnp.ones((n_tasks,), jnp.float32) if task_weights is None else \
         jnp.asarray(task_weights, jnp.float32)
@@ -169,7 +182,14 @@ def make_train_step(grad_fn: Callable, optimizer) -> TrainStep:
 def make_step(model, optimizer, plan=None, *, accum: int = 1,
               task_weights=None) -> TrainStep:
     """One call from model + optimizer (+ plan) to an uncompiled TrainStep.
-    Compile it with ``plan.compile(step)``."""
+    Compile it with ``plan.compile(step)``. Hierarchical plans (a
+    ``HeadPlacement`` instead of a mesh) get a ``HierStepSpec`` — same
+    ``plan.compile()`` call, per-group executables built there."""
+    if plan is not None and plan.resolved_backend == "hier":
+        assert isinstance(model, MultiTaskModel), \
+            "backend='hier' shards per-task heads — needs a MultiTaskModel"
+        return HierStepSpec(model=model, optimizer=optimizer, accum=accum,
+                            task_weights=task_weights)
     grad_fn = make_grad_fn(model, plan, task_weights=task_weights)
     axis = 1 if isinstance(model, MultiTaskModel) else 0
     grad_fn = with_grad_accum(grad_fn, accum, axis=axis)

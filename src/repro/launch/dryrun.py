@@ -15,6 +15,7 @@ memory_analysis / cost_analysis / collective schedule for §Dry-run and
 """
 import argparse
 import json
+import math
 import time
 import traceback
 from functools import partial
@@ -79,6 +80,8 @@ def build_lowered(arch: str, shape_name: str, mesh, impl="chunked",
     shape = SHAPES[shape_name]
 
     if cfg.family == "gnn":
+        if mesh is None:       # hierarchical: per-group sub-meshes, no mesh
+            return _build_gfm_hier_lowered(cfg)
         return _build_gfm_lowered(cfg, mesh)
 
     if shape.kind == "train":
@@ -135,13 +138,33 @@ def build_lowered(arch: str, shape_name: str, mesh, impl="chunked",
                      "swa_variant": eff_cfg is not cfg and bool(cfg.swa_variant_window)}
 
 
+def _gfm_batch_shapes(cfg, n_req: int = 1):
+    """ShapeDtypeStruct task-major batch for the paper's model. The
+    per-task batch must divide ``n_req`` (product of the axes its dim is
+    sharded over); paper local batch is 128 per process."""
+    B = 128 if 128 % n_req == 0 else n_req
+    T, A, E = cfg.n_tasks, cfg.max_atoms, cfg.max_edges
+    return {
+        "species": jax.ShapeDtypeStruct((T, B, A), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((T, B, A, 3), jnp.float32),
+        "edge_src": jax.ShapeDtypeStruct((T, B, E), jnp.int32),
+        "edge_dst": jax.ShapeDtypeStruct((T, B, E), jnp.int32),
+        "node_mask": jax.ShapeDtypeStruct((T, B, A), jnp.bool_),
+        "edge_mask": jax.ShapeDtypeStruct((T, B, E), jnp.bool_),
+        "energy": jax.ShapeDtypeStruct((T, B), jnp.float32),
+        "forces": jax.ShapeDtypeStruct((T, B, A, 3), jnp.float32),
+    }
+
+
 def _build_gfm_lowered(cfg, mesh):
     """The paper's model: MTP x DDP train step on the task mesh."""
     from repro.core import MTPConfig, make_gfm_mtl
     model = make_gfm_mtl(cfg, cfg.n_tasks)
-    # task-sharded heads need n_tasks to divide the task axis; otherwise run
-    # the paper's MTL-base mode (heads replicated, pure DDP)
-    mode = "par" if mesh.shape["model"] % cfg.n_tasks == 0 else "base"
+    # task-sharded heads need a "model" axis that n_tasks divides; meshes
+    # without one (1-axis data meshes) and ragged task counts run the
+    # paper's MTL-base mode (heads replicated, pure DDP) instead
+    m_ax = dict(mesh.shape).get("model", 0)
+    mode = "par" if m_ax and m_ax % cfg.n_tasks == 0 else "base"
     mtp = MTPConfig(n_tasks=cfg.n_tasks, mode=mode,
                     data_axes=data_axes(mesh))
     opt = adamw(1e-3)
@@ -152,21 +175,11 @@ def _build_gfm_lowered(cfg, mesh):
     # divide the axes its dim is sharded over ("data" in par mode, all axes
     # in base mode; the paper mesh has data=100)
     n_req = 1
-    for a in (data_axes(mesh) if mode == "par" else
-              data_axes(mesh) + ("model",)):
-        n_req *= mesh.shape[a]
-    B = 128 if 128 % n_req == 0 else n_req
-    T, A, E = cfg.n_tasks, cfg.max_atoms, cfg.max_edges
-    batch_shapes = {
-        "species": jax.ShapeDtypeStruct((T, B, A), jnp.int32),
-        "pos": jax.ShapeDtypeStruct((T, B, A, 3), jnp.float32),
-        "edge_src": jax.ShapeDtypeStruct((T, B, E), jnp.int32),
-        "edge_dst": jax.ShapeDtypeStruct((T, B, E), jnp.int32),
-        "node_mask": jax.ShapeDtypeStruct((T, B, A), jnp.bool_),
-        "edge_mask": jax.ShapeDtypeStruct((T, B, E), jnp.bool_),
-        "energy": jax.ShapeDtypeStruct((T, B), jnp.float32),
-        "forces": jax.ShapeDtypeStruct((T, B, A, 3), jnp.float32),
-    }
+    shard_axes = data_axes(mesh) if mode == "par" else \
+        data_axes(mesh) + ("model",)
+    for a in shard_axes:
+        n_req *= dict(mesh.shape).get(a, 1)
+    batch_shapes = _gfm_batch_shapes(cfg, n_req)
     b_sds = _sds_with_shardings(batch_shapes,
                                 plan.data_batch_shardings(batch_shapes))
 
@@ -174,6 +187,49 @@ def _build_gfm_lowered(cfg, mesh):
     lowered = plan.compile(step).lower(state_sds, b_sds)
     return lowered, {"kind": "gfm-train", "n_tasks": cfg.n_tasks,
                      "mtp_mode": mode}
+
+
+def _build_gfm_hier_lowered(cfg, n_devices: int | None = None):
+    """Hierarchical MTP dry-run: solve the imbalance-aware placement over
+    the host device pool at the paper's source mix, lower every group, and
+    report the per-group HBM model (hlo_stats.hier_group_memory). The
+    returned lowering is the BOTTLENECK group's per-device program — its
+    memory/cost numbers are the step's critical path."""
+    from repro.core import make_gfm_mtl, solve_placement
+    from repro.data.synthetic_atoms import PAPER_REL_SIZES
+    from repro.launch.hlo_stats import hier_group_memory
+
+    model = make_gfm_mtl(cfg, cfg.n_tasks)
+    mix = list(PAPER_REL_SIZES.values())
+    loads = [mix[t % len(mix)] for t in range(cfg.n_tasks)]
+    n_dev = n_devices if n_devices is not None else len(jax.devices())
+    placement = solve_placement(n_dev, loads)
+    opt = adamw(1e-3)
+    plan = ShardingPlan(placement=placement)
+    state_sds = plan.state_template(model.init, opt)
+    batch_shapes = _gfm_batch_shapes(cfg)
+
+    compiled = plan.compile(make_step(model, opt, plan))
+    lowers = compiled.lower_groups(state_sds, batch_shapes)
+
+    # the §4.3 residency model: trunk replicated per group, head slices
+    # resident only in their group
+    def nbytes(tree):
+        return sum(int(jnp.dtype(l.dtype).itemsize) * math.prod(l.shape)
+                   for l in jax.tree_util.tree_leaves(tree))
+
+    shared_bytes = nbytes(state_sds.params["shared"])
+    head_bytes = nbytes(state_sds.params["heads"]) // cfg.n_tasks
+    group_memory = hier_group_memory(placement, shared_bytes, head_bytes)
+
+    gl = placement.group_loads()
+    hot = gl.index(max(gl))
+    meta = {"kind": "gfm-hier-train", "n_tasks": cfg.n_tasks,
+            "placement": {"groups": [list(g) for g in placement.groups],
+                          "device_counts": list(placement.device_counts),
+                          "loads": list(placement.loads or ())},
+            "group_memory": group_memory, "bottleneck_group": hot}
+    return lowers[hot][1], meta
 
 
 def analyze(lowered, compile_too=True) -> dict:
@@ -227,6 +283,14 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, *, impl="chunked",
         return entry
     if mesh_kind == "paper":
         mesh = make_gfm_paper_mesh()
+    elif mesh_kind == "hier":
+        # hierarchical plan: no global mesh — per-group sub-meshes are
+        # solved from the device pool (gnn family only)
+        if configs.get(arch).family != "gnn":
+            entry["status"] = "skip"
+            entry["reason"] = "hier placement shards per-task heads (gnn only)"
+            return entry
+        mesh = None
     elif mesh_kind.startswith("pod32x8"):
         from repro.launch.mesh import make_alt_mesh
         mesh = make_alt_mesh(8)
@@ -252,7 +316,8 @@ def main():
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)
     ap.add_argument("--mesh", default="pod",
-                    choices=["pod", "multipod", "both", "paper", "pod32x8"])
+                    choices=["pod", "multipod", "both", "paper", "pod32x8",
+                             "hier"])
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--accum", type=int, default=1)
     ap.add_argument("--baseline", action="store_true",

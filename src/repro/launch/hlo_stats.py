@@ -57,6 +57,60 @@ def collective_stats(hlo_text: str) -> dict:
     return res
 
 
+def param_bytes_per_device(tree) -> int:
+    """Per-device resident bytes of a sharded template/array pytree: each
+    leaf's byte size divided by the product of the mesh-axis sizes its
+    PartitionSpec actually uses. Mesh-rank agnostic — flat ``(data,
+    model)``, multi-pod 3-axis, and hierarchical 1-axis group meshes all
+    work (the old estimate hard-coded the two flat axis names). Leaves
+    without a sharding count as replicated."""
+    import jax
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        n = 1
+        for d in leaf.shape:
+            n *= int(d)
+        size = n * leaf.dtype.itemsize
+        sharding = getattr(leaf, "sharding", None)
+        spec = getattr(sharding, "spec", None)
+        mesh = getattr(sharding, "mesh", None)
+        denom = 1
+        if spec is not None and mesh is not None:
+            axsize = dict(mesh.shape)
+            for entry in spec:
+                if entry is None:
+                    continue
+                for ax in (entry if isinstance(entry, tuple) else (entry,)):
+                    denom *= axsize.get(ax, 1)
+        total += -(-size // denom)        # ceil: XLA pads ragged tiles
+    return total
+
+
+def hier_group_memory(placement, shared_bytes: int, head_bytes,
+                      *, opt_factor: float = 3.0) -> list[dict]:
+    """Modeled per-device HBM of each group in a hierarchical placement:
+    the trunk is replicated into every group while a head's params live
+    ONLY in its group — the paper's §4.3 ``P_s + Σ_{t∈g} P_h`` residency
+    (one head per group reproduces ``P_s + P_h`` exactly).
+
+    head_bytes: one int (uniform heads) or a per-head byte sequence.
+    opt_factor: bytes per resident param byte across train state (3.0 =
+    fp32 params + AdamW m/v moments). Returns one dict per group with the
+    modeled ``param_bytes`` / ``hbm_bytes`` and the group's shape."""
+    n_heads = placement.n_heads
+    hb = [int(head_bytes)] * n_heads if isinstance(head_bytes, (int, float)) \
+        else [int(b) for b in head_bytes]
+    assert len(hb) == n_heads, f"{len(hb)} head_bytes for {n_heads} heads"
+    out = []
+    for g, (heads, n_dev) in enumerate(zip(placement.groups,
+                                           placement.device_counts)):
+        pb = int(shared_bytes) + sum(hb[t] for t in heads)
+        out.append({"group": g, "heads": list(heads), "devices": int(n_dev),
+                    "param_bytes": pb,
+                    "hbm_bytes": int(round(opt_factor * pb))})
+    return out
+
+
 def op_histogram(hlo_text: str, top: int = 15) -> list[tuple[str, int]]:
     counts: dict = defaultdict(int)
     for line in hlo_text.splitlines():

@@ -44,3 +44,24 @@ def make_gfm_paper_mesh(n_tasks: int = 5, dp: int = 100) -> Mesh:
 def make_host_mesh(data: int, model: int) -> Mesh:
     """Small mesh over however many host devices exist (tests/examples)."""
     return _make_mesh((data, model), ("data", "model"))
+
+
+def make_group_meshes(placement, *, devices=None) -> list[Mesh]:
+    """Per-group sub-meshes for a hierarchical plan: the device pool is
+    partitioned contiguously by ``placement.device_counts`` and each slice
+    becomes a 1-axis ``("data",)`` mesh — within a group the batch is
+    data-parallel and the group's head slice is replicated, so the group IS
+    its heads' model shard (the paper's head sub-group).
+
+    devices: explicit device list (length >= placement.n_devices); defaults
+    to ``jax.devices()``. Raises if the pool is too small."""
+    devs = list(devices) if devices is not None else jax.devices()
+    need = placement.n_devices
+    assert len(devs) >= need, (
+        f"placement needs {need} devices, host has {len(devs)} — solve the "
+        f"placement against the real device count")
+    meshes, off = [], 0
+    for c in placement.device_counts:
+        meshes.append(Mesh(np.array(devs[off: off + c]), ("data",)))
+        off += c
+    return meshes

@@ -43,7 +43,8 @@ SNIPPETS = _snippets()
 def test_docs_exist_and_have_executable_snippets():
     names = {f.name for f in _doc_files()}
     assert {"architecture.md", "kernels.md", "data.md", "benchmarks.md",
-            "migration.md", "static_analysis.md", "README.md"} <= names, names
+            "migration.md", "static_analysis.md", "parallelism.md",
+            "README.md"} <= names, names
     assert len(SNIPPETS) >= 6, "docs lost their executable examples"
 
 

@@ -79,3 +79,72 @@ def test_remat_recompute_is_counted():
     # within ~2% of XLA's own count on a loop-free graph (XLA additionally
     # counts a few elementwise transcendental fusions as flops)
     assert r["flops"] >= float(xla_cost_analysis(c)["flops"]) * 0.95
+
+
+# ---------------------------------------------------------------------------
+# hierarchical-mesh memory model (launch/hlo_stats.py)
+# ---------------------------------------------------------------------------
+
+def test_hier_group_memory_pinned():
+    """Per-group HBM: trunk replicated into every group, a head's params
+    resident only in its group — exact bytes pinned on a known placement."""
+    from repro.core import HeadPlacement
+    from repro.launch.hlo_stats import hier_group_memory
+
+    p = HeadPlacement(groups=((0,), (1, 2)), device_counts=(3, 1))
+    mem = hier_group_memory(p, shared_bytes=100, head_bytes=[10, 20, 30])
+    assert [g["param_bytes"] for g in mem] == [110, 150]
+    assert [g["hbm_bytes"] for g in mem] == [330, 450]   # 3x: params + m + v
+    assert mem[0]["heads"] == [0] and mem[0]["devices"] == 3
+    assert mem[1]["heads"] == [1, 2] and mem[1]["devices"] == 1
+    # uniform-head shorthand
+    mem2 = hier_group_memory(p, shared_bytes=100, head_bytes=10,
+                             opt_factor=1.0)
+    assert [g["param_bytes"] for g in mem2] == [110, 120]
+    assert [g["hbm_bytes"] for g in mem2] == [110, 120]
+
+
+def test_param_bytes_per_device_mesh_rank_agnostic():
+    """The per-device residency estimate must honor whatever mesh axes a
+    leaf's PartitionSpec names — 2-axis flat, 1-axis group, and replicated
+    leaves — instead of hard-coding the (data, model) pair."""
+    from types import SimpleNamespace
+
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.hlo_stats import param_bytes_per_device
+
+    def leaf(shape, spec, mesh_shape):
+        sh = SimpleNamespace(spec=spec,
+                             mesh=SimpleNamespace(shape=mesh_shape))
+        return SimpleNamespace(shape=shape, dtype=np.dtype(np.float32),
+                               sharding=sh)
+
+    flat = {"shape": {"data": 4, "model": 2}}
+    # f32[8,16] sharded over model(2) on dim0 -> 8*16*4/2 = 256
+    assert param_bytes_per_device(
+        [leaf((8, 16), P("model", None), flat["shape"])]) == 256
+    # sharded over BOTH axes -> /8
+    assert param_bytes_per_device(
+        [leaf((8, 16), P("data", "model"), flat["shape"])]) == 64
+    # 1-axis hierarchical group mesh: only "data" exists
+    assert param_bytes_per_device(
+        [leaf((8, 16), P("data"), {"data": 4})]) == 128
+    # replicated spec -> full bytes; no sharding attr at all -> full bytes
+    assert param_bytes_per_device(
+        [leaf((8, 16), P(None, None), flat["shape"])]) == 512
+    assert param_bytes_per_device(
+        [SimpleNamespace(shape=(8, 16), dtype=np.dtype(np.float32))]) == 512
+    # ragged tile rounds UP (XLA pads): f32[5] over 2 devices -> ceil(20/2)
+    assert param_bytes_per_device([leaf((5,), P("data"), {"data": 2})]) == 10
+    assert param_bytes_per_device([leaf((5,), P("data"), {"data": 3})]) == 7
+
+
+def test_param_bytes_per_device_on_real_jax_arrays():
+    """The same estimator on genuine single-device jax arrays (replicated
+    semantics): exact byte totals."""
+    from repro.launch.hlo_stats import param_bytes_per_device
+
+    tree = {"w": jnp.zeros((4, 8), jnp.float32),
+            "b": jnp.zeros((8,), jnp.bfloat16)}
+    assert param_bytes_per_device(tree) == 4 * 8 * 4 + 8 * 2

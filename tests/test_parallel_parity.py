@@ -1,0 +1,142 @@
+"""Cross-plan numerical parity: the hierarchical backend vs the flat
+(data, task) pjit mesh vs single-device jit, all built through the ONE
+public path (``engine.make_step`` + ``ShardingPlan.compile``).
+
+Per-task losses must agree within fp32 tolerance for 3 optimizer steps on
+8 host devices, for BOTH an even 4-heads split and the ragged
+5-heads-on-8-devices paper configuration (the hierarchical plan's whole
+point — a flat mesh can't express it). Needs >1 device, so runs in a
+subprocess with ``--xla_force_host_platform_device_count=8`` (the main
+pytest process keeps 1 device).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro.configs.base import ArchConfig
+    from repro.core import MTPConfig, make_gfm_mtl, solve_placement
+    from repro.data.synthetic_atoms import (PAPER_REL_SIZES, generate_all,
+                                            to_batch_dict)
+    from repro.engine import ShardingPlan, TrainState, make_step
+    from repro.launch.mesh import make_host_mesh
+    from repro.optim import adamw
+
+    assert jax.device_count() == 8
+    cfg = ArchConfig(name="g", family="gnn", gnn_hidden=24, gnn_layers=2,
+                     n_species=64, head_hidden=12, head_layers=2, remat=False,
+                     compute_dtype=jnp.float32)
+
+    def run_case(sources, mesh_shape):
+        T = len(sources)
+        model = make_gfm_mtl(cfg, T)
+        params = model.init(jax.random.PRNGKey(0))
+        data = generate_all(16, max_atoms=10, max_edges=40, sources=sources)
+        rng = np.random.default_rng(0)
+        batches = []
+        for _ in range(3):                      # 3 steps, 3 distinct batches
+            idx = rng.integers(0, 16, size=8)
+            bs = [to_batch_dict(sd, idx) for sd in data.values()]
+            batches.append({k: jnp.stack([b[k] for b in bs]) for k in bs[0]})
+        tw = tuple(PAPER_REL_SIZES[s] for s in sources)
+        opt = adamw(1e-3)
+        mtp = MTPConfig(n_tasks=T, mode="par")
+        plans = {
+            "jit": ShardingPlan(mtp=mtp, donate=False),
+            "pjit": ShardingPlan(mesh=make_host_mesh(*mesh_shape), mtp=mtp,
+                                 backend="pjit", donate=False),
+            "hier": ShardingPlan(placement=solve_placement(8, tw),
+                                 donate=False),
+        }
+        out = {}
+        for name, plan in plans.items():
+            step = plan.compile(make_step(model, opt, plan, task_weights=tw))
+            state = plan.shard_state(TrainState.create(params, opt))
+            losses, per_task = [], []
+            for b in batches:
+                state, o = step(state, plan.shard_batch(b))
+                losses.append(float(o.loss))
+                per_task.append(np.asarray(o.metrics["per_task_loss"],
+                                           np.float64).tolist())
+            row = {"loss": losses, "per_task": per_task}
+            if plan.placement is not None:
+                row["groups"] = [list(g) for g in plan.placement.groups]
+                row["device_counts"] = list(plan.placement.device_counts)
+            out[name] = row
+        return out
+
+    res = {
+        "even4": run_case(["ani1x", "qm7x", "mptrj", "alexandria"], (2, 4)),
+        "ragged5": run_case(list(PAPER_REL_SIZES), (1, 5)),
+    }
+    print("RESULT " + json.dumps(res))
+""")
+
+
+@pytest.fixture(scope="module")
+def result():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")][0]
+    return json.loads(line[len("RESULT "):])
+
+
+# fp32 tolerance over 3 steps: summation order is the only difference
+RTOL, ATOL = 5e-5, 1e-6
+
+
+@pytest.mark.parametrize("case", ["even4", "ragged5"])
+@pytest.mark.parametrize("backend", ["pjit", "hier"])
+def test_per_task_losses_match_single_device(result, case, backend):
+    ref = np.asarray(result[case]["jit"]["per_task"])
+    got = np.asarray(result[case][backend]["per_task"])
+    assert got.shape == ref.shape
+    np.testing.assert_allclose(got, ref, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("case", ["even4", "ragged5"])
+@pytest.mark.parametrize("backend", ["pjit", "hier"])
+def test_total_losses_match_single_device(result, case, backend):
+    np.testing.assert_allclose(result[case][backend]["loss"],
+                               result[case]["jit"]["loss"],
+                               rtol=RTOL, atol=ATOL)
+
+
+def test_hier_vs_pjit_directly(result):
+    for case in ("even4", "ragged5"):
+        np.testing.assert_allclose(
+            np.asarray(result[case]["hier"]["per_task"]),
+            np.asarray(result[case]["pjit"]["per_task"]),
+            rtol=RTOL, atol=ATOL)
+
+
+def test_ragged_split_really_is_ragged(result):
+    """5 heads over 8 devices: the solver's uneven split (no flat mesh can
+    express it) — transition1x gets 3 devices, and the groups cover all 8."""
+    row = result["ragged5"]["hier"]
+    assert row["device_counts"] == [2, 1, 3, 1, 1]
+    assert sum(row["device_counts"]) == 8
+    assert sorted(h for g in row["groups"] for h in g) == [0, 1, 2, 3, 4]
+    assert len(set(row["device_counts"])) > 1   # genuinely uneven
+
+
+def test_losses_evolve_over_steps(result):
+    """3 steps actually train (losses change), so parity is not vacuous."""
+    for case in ("even4", "ragged5"):
+        losses = result[case]["jit"]["loss"]
+        assert len(losses) == 3
+        assert len({round(l, 8) for l in losses}) == 3

@@ -1,0 +1,141 @@
+"""Property tests for the imbalance-aware head-placement solver
+(repro.core.balancing.solve_placement) and the HeadPlacement vocabulary.
+
+Seeded sweeps over (devices, heads, mix weights) pin the solver contract:
+every head placed exactly once, group device counts partition the mesh,
+determinism for a fixed seed, and modeled max-group load never worse than
+round-robin's. The paper's 5-source mix on 8 devices is pinned exactly —
+it is the configuration the bench sweep and parity suite run.
+"""
+import numpy as np
+import pytest
+
+from repro.core import HeadPlacement, round_robin_placement, solve_placement
+from repro.data.synthetic_atoms import PAPER_REL_SIZES
+
+
+def _sweep_cases():
+    rng = np.random.default_rng(1234)
+    cases = []
+    for n_dev in (1, 2, 3, 5, 8, 13, 16):
+        for n_heads in (1, 2, 3, 5, 8, 11):
+            w = rng.gamma(shape=1.0, scale=1.0, size=n_heads) + 1e-3
+            cases.append(pytest.param(n_dev, n_heads, tuple(w),
+                                      id=f"d{n_dev}h{n_heads}"))
+    return cases
+
+
+SWEEP = _sweep_cases()
+
+
+@pytest.mark.parametrize("n_dev,n_heads,w", SWEEP)
+def test_every_head_placed_exactly_once(n_dev, n_heads, w):
+    p = solve_placement(n_dev, w)
+    flat = sorted(h for g in p.groups for h in g)
+    assert flat == list(range(n_heads))
+    assert all(len(g) >= 1 for g in p.groups)
+
+
+@pytest.mark.parametrize("n_dev,n_heads,w", SWEEP)
+def test_group_sizes_partition_the_mesh(n_dev, n_heads, w):
+    p = solve_placement(n_dev, w)
+    assert sum(p.device_counts) == n_dev
+    assert all(c >= 1 for c in p.device_counts)
+    assert p.n_devices == n_dev and p.n_heads == n_heads
+
+
+@pytest.mark.parametrize("n_dev,n_heads,w", SWEEP)
+def test_deterministic_for_fixed_seed(n_dev, n_heads, w):
+    a = solve_placement(n_dev, w, seed=7)
+    b = solve_placement(n_dev, w, seed=7)
+    assert a == b
+
+
+@pytest.mark.parametrize("n_dev,n_heads,w", SWEEP)
+def test_never_worse_than_round_robin(n_dev, n_heads, w):
+    wn = tuple(float(x) / sum(w) for x in w)
+    p = solve_placement(n_dev, w)
+    rr = round_robin_placement(n_heads, n_dev)
+    assert p.max_group_load() <= rr.max_group_load(wn) + 1e-12
+
+
+def test_paper_mix_on_8_devices_pinned():
+    """The bench-sweep configuration: 5 paper-proportioned sources on 8
+    host devices. The solver gives transition1x (the heaviest source) 3
+    devices and STRICTLY beats round-robin's even split."""
+    mix = list(PAPER_REL_SIZES.values())
+    p = solve_placement(8, mix)
+    rr = round_robin_placement(5, 8)
+    assert p.groups == ((0,), (1,), (2,), (3,), (4,))
+    assert p.device_counts == (2, 1, 3, 1, 1)
+    assert p.max_group_load() < rr.max_group_load(p.loads)
+    np.testing.assert_allclose(p.max_group_load(), 0.17872, atol=1e-4)
+    np.testing.assert_allclose(rr.max_group_load(p.loads), 0.20638, atol=1e-4)
+
+
+def test_more_heads_than_devices_packs_all_devices():
+    p = solve_placement(3, [5, 1, 1, 1, 1, 1, 5, 5])
+    assert p.n_groups == 3 and p.device_counts == (1, 1, 1)
+    rr = round_robin_placement(8, 3)
+    assert p.max_group_load() <= rr.max_group_load(p.loads)
+
+
+def test_zero_load_heads_never_strand_a_device():
+    # ties on zero-load heads must still leave every device owning >=1 head
+    p = solve_placement(3, [1.0, 0.0, 0.0, 0.0])
+    assert all(len(g) >= 1 for g in p.groups)
+    assert sum(p.device_counts) == 3
+
+
+def test_single_device_degenerate():
+    p = solve_placement(1, [1, 2, 3])
+    assert p.groups == ((0, 1, 2),) and p.device_counts == (1,)
+
+
+def test_loads_recorded_and_group_loads_model():
+    p = solve_placement(4, [1, 1, 2])
+    assert p.loads is not None and len(p.loads) == 3
+    np.testing.assert_allclose(sum(p.loads), 1.0)
+    gl = p.group_loads()
+    assert len(gl) == p.n_groups
+    assert max(gl) == p.max_group_load()
+
+
+def test_round_robin_shape():
+    rr = round_robin_placement(5, 8)
+    assert rr.groups == ((0,), (1,), (2,), (3,), (4,))
+    assert rr.device_counts == (2, 2, 2, 1, 1)
+    rr2 = round_robin_placement(7, 3)   # heads dealt cyclically
+    assert rr2.groups == ((0, 3, 6), (1, 4), (2, 5))
+    assert rr2.device_counts == (1, 1, 1)
+
+
+def test_head_placement_validation():
+    with pytest.raises(AssertionError):      # head 1 missing
+        HeadPlacement(groups=((0,), (2,)), device_counts=(1, 1))
+    with pytest.raises(AssertionError):      # duplicate head
+        HeadPlacement(groups=((0, 1), (1,)), device_counts=(1, 1))
+    with pytest.raises(AssertionError):      # zero-device group
+        HeadPlacement(groups=((0,), (1,)), device_counts=(2, 0))
+    with pytest.raises(AssertionError):      # headless group
+        HeadPlacement(groups=((0, 1), ()), device_counts=(1, 1))
+    with pytest.raises(AssertionError):      # loads length mismatch
+        HeadPlacement(groups=((0, 1),), device_counts=(2,), loads=(1.0,))
+
+
+def test_group_of():
+    p = HeadPlacement(groups=((0, 2), (1,)), device_counts=(1, 3))
+    assert p.group_of(0) == 0 and p.group_of(2) == 0 and p.group_of(1) == 1
+    with pytest.raises(KeyError):
+        p.group_of(3)
+
+
+def test_bad_loads_rejected():
+    with pytest.raises(AssertionError):
+        solve_placement(4, [])
+    with pytest.raises(AssertionError):
+        solve_placement(4, [0.0, 0.0])
+    with pytest.raises(AssertionError):
+        solve_placement(4, [1.0, -0.5])
+    with pytest.raises(AssertionError):
+        solve_placement(0, [1.0])

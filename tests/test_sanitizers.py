@@ -2,8 +2,16 @@
 
 The end-to-end case is the compile-count regression the ISSUE asks for: a
 20-step Session run must compile its train step EXACTLY once — a second
-compilation means a shape/dtype leaked into the traced signature.
+compilation means a shape/dtype leaked into the traced signature. The
+hierarchical backend gets the same treatment: a placement change must
+rebuild EXACTLY the group executables whose device sets changed.
 """
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -148,3 +156,86 @@ def test_track_session_sees_rebuilt_step():
     assert san.compilations() == 2
     with pytest.raises(RecompileBudgetError):
         san.check()
+
+
+# ---------------------------------------------------------------------------
+# hierarchical backend: per-group executables under the same budget contract
+# ---------------------------------------------------------------------------
+
+def test_hier_session_single_device_functions_and_budget():
+    """A 1-device hierarchical Session degenerates to one group: Session.
+    compiled_functions() must surface the per-group step + the update jit,
+    and 5 steps must stay within a 2-compile budget (one per function)."""
+    scfg = SessionConfig(model="gfm-mtl", arch=_gfm_cfg(), steps=5,
+                         batch_per_task=8, lr=3e-3, verbose=False,
+                         placement=1)
+    sess = Session.from_config(scfg, sources=_gfm_sources(),
+                               task_names=["a", "b", "c"])
+    with RecompileSanitizer(budget=2, label="hier 1-device") as san:
+        san.track_session(sess)
+        res = sess.run()
+    assert len(sess.compiled_functions()) == 2   # one group fn + the update
+    assert san.compilations() == 2
+    assert np.isfinite(res.final_loss) and int(res.state.step) == 5
+
+
+_HIER_SWAP_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import json
+    import jax, jax.numpy as jnp
+    from repro.analysis import RecompileSanitizer
+    from repro.configs.base import ArchConfig
+    from repro.core import HeadPlacement
+    from repro.data.synthetic_atoms import generate_all
+    from repro.engine import Session, SessionConfig
+
+    assert jax.device_count() == 4
+    cfg = ArchConfig(name="g", family="gnn", gnn_hidden=24, gnn_layers=2,
+                     n_species=64, head_hidden=12, head_layers=2, remat=False,
+                     compute_dtype=jnp.float32)
+    data = generate_all(24, max_atoms=10, max_edges=40,
+                        sources=["ani1x", "qm7x", "mptrj"])
+    sources = [dict(species=s.species, pos=s.pos, edge_src=s.edge_src,
+                    edge_dst=s.edge_dst, node_mask=s.node_mask,
+                    edge_mask=s.edge_mask, energy=s.energy, forces=s.forces)
+               for s in data.values()]
+    # same head grouping, shifted device split: only head 2 keeps its
+    # device set ({3}), so exactly two group executables must rebuild.
+    p1 = HeadPlacement(groups=((0,), (1,), (2,)), device_counts=(2, 1, 1))
+    p2 = HeadPlacement(groups=((0,), (1,), (2,)), device_counts=(1, 2, 1))
+    scfg = SessionConfig(model="gfm-mtl", arch=cfg, steps=3, batch_per_task=8,
+                         lr=3e-3, verbose=False, placement=p1)
+    sess = Session.from_config(scfg, sources=sources,
+                               task_names=["a", "b", "c"])
+    san = RecompileSanitizer(budget=6, label="hier placement swap")
+    san.track_session(sess)
+    sess.run()
+    out = {"compiles_first_run": san.compilations(),
+           "n_functions_first": len(sess.compiled_functions())}
+    sess.set_placement(p2)
+    sess.run()
+    out["compiles_after_swap"] = san.compilations()
+    out["n_functions_after"] = len(sess.compiled_functions())
+    san.check()
+    print("RESULT " + json.dumps(out))
+""")
+
+
+def test_hier_placement_change_rebuilds_exactly_affected():
+    """Placement (2,1,1) -> (1,2,1) over 4 devices keeps head 2 on device
+    {3}: its executable must be REUSED while heads 0/1 rebuild — 4 compiles
+    after the first run (3 groups + update), exactly 6 after the swap."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", _HIER_SWAP_SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines()
+            if l.startswith("RESULT ")][0]
+    out = json.loads(line[len("RESULT "):])
+    assert out["compiles_first_run"] == 4
+    assert out["n_functions_first"] == 4
+    assert out["compiles_after_swap"] == 6      # NOT 7: head 2 reused
+    assert out["n_functions_after"] == 6        # old entries kept for reuse
