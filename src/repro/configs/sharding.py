@@ -140,6 +140,19 @@ def hier_batch_spec(leaf, n_devices: int, axis: str = "data") -> P:
     return P(None, axis, *([None] * (nd - 2)))
 
 
+def serve_batch_spec(leaf, n_devices: int, axis: str = "data") -> P:
+    """Spec for one leaf of an assembled SERVING batch (max_batch, ...) on a
+    1-axis serving mesh (``launch.mesh.make_replica_meshes`` /
+    ``ServeSession(mesh=...)``): rows are data-parallel over the axis —
+    replicate when the static row count doesn't tile evenly (jit
+    in_shardings require even tiling). The serving analogue of
+    ``hier_batch_spec``: head params stay replicated, only rows shard."""
+    nd = leaf.ndim
+    if nd < 1 or leaf.shape[0] % max(n_devices, 1) != 0:
+        return P(*([None] * nd))
+    return P(axis, *([None] * (nd - 1)))
+
+
 def tree_shardings(mesh: Mesh, tree, spec_fn):
     """NamedSharding pytree for a params pytree / eval_shape tree."""
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)

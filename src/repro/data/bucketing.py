@@ -212,11 +212,21 @@ class BucketingBatcher:
     # -- delegation ---------------------------------------------------------
 
     def state(self) -> dict:
-        # bucketing is a pure function of the wrapped stream — no own state
-        return self.batcher.state()
+        # the bucketed STREAM is a pure function of the wrapped batcher, but
+        # ``shapes_seen`` is real session state: it is the compiled-shape
+        # surface RecompileSanitizer budget checks audit, and a resumed run
+        # that dropped it would under-report until every shape recurred
+        return {"kind": "BucketingBatcher",
+                "shapes_seen": sorted(list(s) for s in self.shapes_seen),
+                "inner": self.batcher.state()}
 
     def restore(self, state: dict):
-        self.batcher.restore(state)
+        if isinstance(state, dict) and state.get("kind") == "BucketingBatcher":
+            self.shapes_seen = {tuple(s) for s in state["shapes_seen"]}
+            self.batcher.restore(state["inner"])
+        else:
+            # pre-scale-out snapshot: bare inner state, no shapes recorded
+            self.batcher.restore(state)
 
     @property
     def sources(self):

@@ -143,13 +143,20 @@ class MixingBatcher:
         """Replace the sampling weights in place (renormalized) — the
         quarantine lever: zero a bad source's weight and it stops appearing
         in batches from the NEXT draw on (already-prefetched batches may
-        still contain it). At least one source must stay positive."""
+        still contain it). At least one source must stay positive.
+
+        A source coming BACK from quarantine (weight 0 -> positive) restarts
+        with zero credit: its stale pre-quarantine credit would otherwise
+        burst-win early slots and skew cumulative counts off the ``k*B*w_s``
+        schedule the smooth round-robin guarantees."""
         w = np.asarray(weights, np.float64)
         assert w.shape == self.weights.shape, \
             f"{w.shape} weights for {self.weights.shape} sources"
         assert (w >= 0).all(), f"weights must be >= 0, got {w}"
         assert w.sum() > 0, "cannot zero every source's weight"
+        reenabled = (self.weights <= 0) & (w > 0)
         self.weights = w / w.sum()
+        self.credit[reenabled] = 0.0
 
     def _take(self, s: int, k: int) -> np.ndarray:
         """k sample indices from source s, shuffled-cyclic."""

@@ -65,3 +65,20 @@ def make_group_meshes(placement, *, devices=None) -> list[Mesh]:
         meshes.append(Mesh(np.array(devs[off: off + c]), ("data",)))
         off += c
     return meshes
+
+
+def make_replica_meshes(n_replicas: int, *, devices_per_replica: int = 1,
+                        devices=None) -> list[Mesh]:
+    """Serving scale-out meshes: partition the device pool into
+    ``n_replicas`` disjoint 1-axis ``("data",)`` sub-meshes of
+    ``devices_per_replica`` each. Built on the SAME ``make_group_meshes``
+    machinery as training's hierarchical plan — each serving replica is a
+    degenerate head group that owns EVERY head (replicated params, rows
+    data-parallel within the replica), so ``ServeSession(mesh=...)`` /
+    ``ReplicaServeSession`` reuse the training mesh contract unchanged."""
+    from repro.core.taskpar import HeadPlacement
+    assert n_replicas >= 1 and devices_per_replica >= 1
+    placement = HeadPlacement(
+        groups=tuple((g,) for g in range(n_replicas)),
+        device_counts=(devices_per_replica,) * n_replicas)
+    return make_group_meshes(placement, devices=devices)

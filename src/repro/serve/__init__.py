@@ -11,8 +11,13 @@ cache whose recompile budget is the bucket grid. See docs/serving.md.
     with ServeSession(params, arch, spec=spec) as srv:
         fut = srv.submit({"species": z, "pos": x, ...}, head=2)
         print(fut.result()["energy"])
+
+Scale-out (docs/serving.md#scaling-out): ``ServeSession(mesh=...)`` shards
+each batch's rows over a device mesh; ``ReplicaServeSession`` runs one
+engine per device behind a least-loaded ``ReplicaScheduler``; adaptive
+release knobs via ``ServeSession(adaptive=True)`` / ``AdaptivePolicy``.
 """
-from .batching import AssembledBatch, SizeBinnedBatcher, assemble
+from .batching import AdaptivePolicy, AssembledBatch, SizeBinnedBatcher, assemble
 from .engine import ServeSession
 from .metrics import Reservoir, ServeMetrics
 from .queue import (
@@ -21,9 +26,11 @@ from .queue import (
     RequestQueue,
     ServeClosedError,
 )
+from .scaleout import ReplicaScheduler, ReplicaServeSession
 
 __all__ = [
-    "AssembledBatch", "DeadlineExceededError", "Request", "RequestQueue",
-    "Reservoir", "ServeClosedError", "ServeMetrics", "ServeSession",
-    "SizeBinnedBatcher", "assemble",
+    "AdaptivePolicy", "AssembledBatch", "DeadlineExceededError", "Request",
+    "ReplicaScheduler", "ReplicaServeSession", "RequestQueue", "Reservoir",
+    "ServeClosedError", "ServeMetrics", "ServeSession", "SizeBinnedBatcher",
+    "assemble",
 ]

@@ -25,6 +25,7 @@ per occupancy k.
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import numpy as np
 
@@ -89,6 +90,84 @@ def assemble(requests: list[Request], bucket: tuple,
         requests=list(requests), bucket=bucket, head=head)
 
 
+class AdaptivePolicy:
+    """Move the (max_batch, max_wait) knee per (bucket, head) bin from the
+    measured arrival rate instead of serving fixed knobs.
+
+    The PR 6 bench showed the knee shifts with model size and load, so a
+    static (max_batch, max_wait) is only right at one operating point. The
+    policy keeps, per bin key, an EWMA of the inter-arrival gap (from
+    ``t_submit`` stamps — the shared engine clock) and of released-bin
+    occupancy, and derives:
+
+      * ``target_rows(key)`` — how many rows are worth waiting for: the
+        arrivals expected inside the base window (capped at ``max_batch``).
+        Under saturating load this is ``max_batch``; at low rates it decays
+        to 1 so lone requests release immediately.
+      * ``wait(key)`` — how long the oldest request may wait: just long
+        enough for ``target_rows`` arrivals (``(rows-1) * gap``), floored at
+        ``min_wait`` and capped at the configured ``max_wait``.
+
+    Only RELEASE timing adapts — the assembled batch is always padded to the
+    static ``max_batch`` rows, so the compiled-shape universe (and the
+    compile budget) is untouched. All inputs come through injected clocks/
+    stamps: under a fake clock the policy is fully deterministic.
+    """
+
+    def __init__(self, *, max_batch: int, max_wait: float,
+                 min_wait: float = 2e-4, alpha: float = 0.2):
+        assert max_batch >= 1 and max_wait >= 0.0
+        assert 0.0 <= min_wait <= max(max_wait, min_wait)
+        assert 0.0 < alpha <= 1.0
+        self.max_batch = max_batch
+        self.base_wait = max_wait
+        self.min_wait = min(min_wait, max_wait) if max_wait > 0 else 0.0
+        self.alpha = alpha
+        self._gap: dict[tuple, float] = {}    # key -> EWMA inter-arrival (s)
+        self._last: dict[tuple, float] = {}   # key -> last arrival stamp
+        self._occ: dict[tuple, float] = {}    # key -> EWMA released rows
+
+    def observe_arrival(self, key: tuple, t: float):
+        last = self._last.get(key)
+        self._last[key] = t
+        if last is None:
+            return
+        gap = max(t - last, 1e-9)
+        g = self._gap.get(key)
+        self._gap[key] = gap if g is None \
+            else (1.0 - self.alpha) * g + self.alpha * gap
+
+    def observe_release(self, key: tuple, occupancy: int):
+        o = self._occ.get(key)
+        self._occ[key] = float(occupancy) if o is None \
+            else (1.0 - self.alpha) * o + self.alpha * occupancy
+
+    def target_rows(self, key: tuple) -> int:
+        g = self._gap.get(key)
+        if g is None:                 # no rate estimate yet: be patient
+            return self.max_batch
+        expect = int(self.base_wait / g) + 1
+        return max(1, min(self.max_batch, expect))
+
+    def wait(self, key: tuple) -> float:
+        g = self._gap.get(key)
+        if g is None:
+            return self.base_wait
+        if g > self.base_wait:        # nothing else is coming in the window
+            return self.min_wait
+        return min(self.base_wait,
+                   max((self.target_rows(key) - 1) * g, self.min_wait))
+
+    def snapshot(self) -> dict:
+        """Per-key effective knobs (JSON-safe), for stats()/bench output."""
+        keys = sorted(self._last)
+        return {repr(k): {"gap_ms": self._gap.get(k, 0.0) * 1e3,
+                          "wait_ms": self.wait(k) * 1e3,
+                          "target_rows": self.target_rows(k),
+                          "occupancy_ewma": self._occ.get(k, 0.0)}
+                for k in keys}
+
+
 class SizeBinnedBatcher:
     """Accumulate requests into per-(bucket, head) bins; release full or
     expired bins. Single-consumer (the engine worker owns it) — no locking.
@@ -96,52 +175,83 @@ class SizeBinnedBatcher:
     max_batch: rows per compiled batch (the static leading dim).
     max_wait:  seconds the OLDEST request of a bin may wait before the bin
                is flushed partially filled (the p99 bound at low rates).
+    clock:     the shared engine clock; ``expired``/``next_deadline`` use it
+               when the caller passes no ``now``, so bin-age math always
+               lives on the same base as ``t_submit``.
+    policy:    optional ``AdaptivePolicy`` — replaces the fixed release
+               knobs with measured-rate per-bin ones (release shape is
+               still the static ``max_batch``).
     """
 
-    def __init__(self, *, max_batch: int = 8, max_wait: float = 0.005):
+    def __init__(self, *, max_batch: int = 8, max_wait: float = 0.005,
+                 clock=time.monotonic, policy: AdaptivePolicy | None = None):
         assert max_batch >= 1 and max_wait >= 0.0
+        if policy is not None:
+            assert policy.max_batch == max_batch, \
+                "policy and batcher must agree on the static batch shape"
         self.max_batch = max_batch
         self.max_wait = max_wait
+        self._clock = clock
+        self.policy = policy
         self._bins: dict[tuple, list[Request]] = {}   # (bucket, head) -> reqs
+
+    # per-bin effective knobs: fixed, unless a policy is measuring
+    def _wait(self, key: tuple) -> float:
+        return self.max_wait if self.policy is None else self.policy.wait(key)
+
+    def _target(self, key: tuple) -> int:
+        return self.max_batch if self.policy is None \
+            else self.policy.target_rows(key)
 
     def add(self, req: Request) -> AssembledBatch | None:
         """File one request; returns an AssembledBatch immediately when it
-        fills its bin, else None (the bin keeps waiting)."""
+        fills its bin (to the policy's target under adaptation), else None
+        (the bin keeps waiting)."""
         key = (req.bucket, req.head)
+        if self.policy is not None:
+            self.policy.observe_arrival(key, req.t_submit)
         bin_ = self._bins.setdefault(key, [])
         bin_.append(req)
-        if len(bin_) >= self.max_batch:
+        if len(bin_) >= self._target(key):
             del self._bins[key]
-            return assemble(bin_, req.bucket, self.max_batch)
+            return self._release(key, bin_)
         return None
 
-    def expired(self, now: float) -> list[AssembledBatch]:
-        """Bins whose oldest request has waited past ``max_wait``, assembled
-        (possibly partial). Deterministic order: by that oldest timestamp."""
+    def _release(self, key: tuple, bin_: list[Request]) -> AssembledBatch:
+        if self.policy is not None:
+            self.policy.observe_release(key, len(bin_))
+        return assemble(bin_, key[0], self.max_batch)
+
+    def expired(self, now: float | None = None) -> list[AssembledBatch]:
+        """Bins whose oldest request has waited past its wait budget,
+        assembled (possibly partial). Deterministic order: by that oldest
+        timestamp."""
+        if now is None:
+            now = self._clock()
         due = [(bin_[0].t_submit, key) for key, bin_ in self._bins.items()
-               if now - bin_[0].t_submit >= self.max_wait]
-        out = []
-        for _, key in sorted(due):
-            bin_ = self._bins.pop(key)
-            out.append(assemble(bin_, key[0], self.max_batch))
-        return out
+               if now - bin_[0].t_submit >= self._wait(key)]
+        return [self._release(key, self._bins.pop(key))
+                for _, key in sorted(due)]
 
     def flush(self) -> list[AssembledBatch]:
         """Assemble every pending bin regardless of age (shutdown drain)."""
-        out = [assemble(bin_, key[0], self.max_batch)
+        out = [self._release(key, bin_)
                for key, bin_ in sorted(self._bins.items(),
                                        key=lambda kv: kv[1][0].t_submit)]
         self._bins.clear()
         return out
 
-    def next_deadline(self, now: float) -> float | None:
+    def next_deadline(self, now: float | None = None) -> float | None:
         """Seconds until the earliest pending bin expires (<= 0: already
         due); None when no bins are waiting. The engine worker uses this as
         its queue-poll timeout so deadline flushes fire on time."""
+        if now is None:
+            now = self._clock()
         if not self._bins:
             return None
-        oldest = min(bin_[0].t_submit for bin_ in self._bins.values())
-        return (oldest + self.max_wait) - now
+        due = min(bin_[0].t_submit + self._wait(key)
+                  for key, bin_ in self._bins.items())
+        return due - now
 
     @property
     def n_pending(self) -> int:

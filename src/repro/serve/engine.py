@@ -22,7 +22,17 @@ so XLA compiles at most one variant per bucket shape — head slices have
 identical shapes/dtypes and hit the jit cache. The recompile budget is
 therefore the bucket grid, exactly as in training (``len(atom_buckets) x
 len(edge_buckets)`` compilations, <= grid x n_heads cache entries;
-asserted by tests/test_serve_engine.py).
+asserted by tests/test_serve_engine.py). A multi-device session is one
+more PLAN, not more shapes: ``mesh=`` shards the batched forward's rows
+data-parallel over a 1-axis serving mesh (params replicated, the
+``configs.sharding.serve_batch_spec`` rule), so the budget generalizes to
+``distinct bucket shapes x plans`` — see ``repro.serve.scaleout`` for the
+replica-per-device mode on top.
+
+The time base is ONE injected ``clock`` (default ``time.monotonic``)
+threaded through queue, batcher, and metrics: ``t_submit``/``deadline``/
+``next_deadline`` arithmetic never mixes clock bases (perf_counter vs
+monotonic skew is unbounded across hosts/suspends).
 
 Shutdown follows the ``Prefetcher`` discipline: ``close()`` stops
 admissions, drains everything already queued or binned through the compiled
@@ -40,7 +50,7 @@ import numpy as np
 from repro.data.bucketing import BucketSpec
 from repro.models import gnn, heads as heads_mod
 
-from .batching import AssembledBatch, SizeBinnedBatcher
+from .batching import AdaptivePolicy, AssembledBatch, SizeBinnedBatcher
 from .metrics import ServeMetrics
 from .queue import DeadlineExceededError, RequestQueue, ServeClosedError
 
@@ -76,6 +86,18 @@ class ServeSession:
     admission_timeout_ms: bound on how long ``submit()`` blocks on
         backpressure before raising ``DeadlineExceededError`` in the
         caller's thread. None = block until a slot frees.
+    mesh: optional 1-axis serving mesh (``make_replica_meshes`` /
+        ``make_group_meshes``): the batched forward's rows are sharded
+        data-parallel over its devices with params replicated
+        (``serve_batch_spec``); ``max_batch`` must tile evenly. None keeps
+        the single-device plan. Row results stay BITWISE equal either way —
+        the forward is per-row independent, sharding only moves rows.
+    adaptive: adapt the release knobs per (bucket, head) from measured
+        arrival rate/occupancy (``AdaptivePolicy``) instead of serving the
+        fixed ``max_batch``/``max_wait_ms`` knee. Padded shapes (and so the
+        compile budget) are unchanged.
+    clock: the session's single time base (monotonic-like callable),
+        threaded through queue, batcher, and metrics.
     """
 
     def __init__(self, params: dict, arch, *, spec: BucketSpec | None = None,
@@ -83,6 +105,7 @@ class ServeSession:
                  queue_depth: int = 256,
                  max_queue_wait_ms: float | None = None,
                  admission_timeout_ms: float | None = None,
+                 mesh=None, adaptive: bool = False,
                  metrics: ServeMetrics | None = None,
                  clock=time.monotonic, seed: int = 0):
         if not (isinstance(params, dict) and
@@ -103,11 +126,12 @@ class ServeSession:
         self.spec = spec
         self.n_heads = n_heads
         self.max_batch = max_batch
+        self.mesh = mesh
         self._clock = clock
         self._shared = params["shared"]
         self._heads = _head_slices(params["heads"], n_heads)
         self.metrics = metrics if metrics is not None else \
-            ServeMetrics(seed=seed)
+            ServeMetrics(seed=seed, clock=clock)
         # retained so restart_worker() can rebuild the queue/batcher pair
         self._queue_depth = queue_depth
         self._max_queue_wait = None if max_queue_wait_ms is None \
@@ -115,9 +139,13 @@ class ServeSession:
         self._admission_timeout = None if admission_timeout_ms is None \
             else admission_timeout_ms * 1e-3
         self._max_wait = max_wait_ms * 1e-3
+        # the policy is measurement state (like the jit cache): it survives
+        # restart_worker(), only the batcher it advises is rebuilt
+        self._policy = AdaptivePolicy(max_batch=max_batch,
+                                      max_wait=self._max_wait) \
+            if adaptive else None
         self.queue = self._make_queue()
-        self.batcher = SizeBinnedBatcher(max_batch=max_batch,
-                                         max_wait=self._max_wait)
+        self.batcher = self._make_batcher()
 
         def forward(shared, head, batch):
             feats = gnn.egnn_apply(shared, batch, cfg=arch)
@@ -127,7 +155,12 @@ class ServeSession:
         # ONE jitted callable shared by every (bucket, head) cache entry:
         # head slices are shape/dtype-identical, so only a new BUCKET shape
         # actually compiles
-        self._predict = jax.jit(forward)
+        if mesh is None:
+            self.plan_devices = 1
+            self._predict = jax.jit(forward)
+        else:
+            self.plan_devices = int(np.prod(list(mesh.shape.values())))
+            self._predict = self._sharded_predict(forward, mesh)
         self._exec: dict[tuple, object] = {}   # (bucket, head) -> callable
         self._shapes_compiled: set = set()
         self._closed = False
@@ -147,6 +180,40 @@ class ServeSession:
                             metrics=self.metrics,
                             max_queue_wait=self._max_queue_wait,
                             admission_timeout=self._admission_timeout)
+
+    def _make_batcher(self) -> SizeBinnedBatcher:
+        return SizeBinnedBatcher(max_batch=self.max_batch,
+                                 max_wait=self._max_wait,
+                                 clock=self._clock, policy=self._policy)
+
+    def _sharded_predict(self, forward, mesh):
+        """jit the forward with rows data-parallel over the serving mesh and
+        params replicated. Params are committed to the mesh once so every
+        call reuses the on-device copies (no per-batch host transfer)."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.configs.sharding import serve_batch_spec, tree_shardings
+
+        ndev = self.plan_devices
+        if self.max_batch % ndev != 0:
+            raise ValueError(
+                f"max_batch={self.max_batch} must tile evenly over the "
+                f"{ndev}-device serving mesh (rows are data-parallel)")
+        replicated = lambda path, leaf: P(*([None] * np.ndim(leaf)))  # noqa: E731
+        shared_sh = tree_shardings(mesh, self._shared, replicated)
+        head_sh = tree_shardings(mesh, self._heads[0], replicated)
+        self._shared = jax.device_put(self._shared, shared_sh)
+        self._heads = [jax.device_put(h, head_sh) for h in self._heads]
+        # assembled-batch leaves are (max_batch, ...); ndim is fixed per key
+        ndims = {"species": 2, "pos": 3, "edge_src": 2, "edge_dst": 2,
+                 "node_mask": 2, "edge_mask": 2}
+        batch_sh = {
+            k: NamedSharding(mesh, serve_batch_spec(
+                np.zeros((self.max_batch,) + (1,) * (nd - 1)), ndev))
+            for k, nd in ndims.items()}
+        out_sh = NamedSharding(mesh, P())   # tiny outputs: gather to all
+        return jax.jit(forward, in_shardings=(shared_sh, head_sh, batch_sh),
+                       out_shardings=out_sh)
 
     # -- construction helpers -----------------------------------------------
 
@@ -228,7 +295,14 @@ class ServeSession:
             "entries": len(self._exec),
             "compiled_shapes": len(self._shapes_compiled),
             "budget": self.spec.n_shapes * self.n_heads,
+            # one plan (single jit cache) regardless of mesh width: XLA
+            # compiles per distinct bucket shape, heads share the executable
+            "compile_budget": self.spec.n_shapes,
         }
+        out["plan"] = {"mode": "sharded" if self.plan_devices > 1
+                       else "single", "devices": self.plan_devices}
+        if self._policy is not None:
+            out["adaptive"] = self._policy.snapshot()
         return out
 
     def close(self):
@@ -390,8 +464,7 @@ class ServeSession:
         self._worker_error = None
         self._inflight = []
         self.queue = self._make_queue()
-        self.batcher = SizeBinnedBatcher(max_batch=self.max_batch,
-                                         max_wait=self._max_wait)
+        self.batcher = self._make_batcher()
         self._closing = threading.Event()
         self._worker = threading.Thread(target=self._serve_loop,
                                         name="serve-worker", daemon=True)

@@ -23,6 +23,7 @@ exact; beyond it, a uniform sample.
 from __future__ import annotations
 
 import threading
+import time
 
 import numpy as np
 
@@ -80,18 +81,27 @@ class ServeMetrics:
       batches                                   — compiled executions run
       batch_slots / batch_real                  — padded vs occupied rows
       compilations                              — distinct compiled shapes
+      routed / failovers                        — replica-scheduler decisions
+                                                  (multi-device mode only)
     ``snapshot()`` returns a plain nested dict (JSON-serializable) with
     latencies in **milliseconds**.
+
+    ``clock`` is the ONE serve time base (engine/queue/batcher share it, see
+    docs/serving.md): rates in ``snapshot()`` are measured against it only —
+    never mixed with another base.
     """
 
-    def __init__(self, *, reservoir_capacity: int = 4096, seed: int = 0):
+    def __init__(self, *, reservoir_capacity: int = 4096, seed: int = 0,
+                 clock=time.monotonic):
         self._lock = threading.Lock()
+        self._clock = clock
+        self._t0 = clock()
         self.counters: dict[str, int] = {
             k: 0 for k in ("submitted", "completed", "failed", "rejected",
                            "shed_admission", "shed_deadline",
                            "worker_failures", "worker_restarts",
                            "batches", "batch_slots", "batch_real",
-                           "compilations")}
+                           "compilations", "routed", "failovers")}
         # one seed per stage, derived deterministically from the base seed
         self.stages = {name: Reservoir(reservoir_capacity, seed=seed + i)
                        for i, name in enumerate(STAGES)}
@@ -111,7 +121,15 @@ class ServeMetrics:
                                              "mean") else k: v
                           for k, v in r.summary().items()}
                    for name, r in self.stages.items()}
+            elapsed = self._clock() - self._t0
         occ = (counters["batch_real"] / counters["batch_slots"]
                if counters["batch_slots"] else 0.0)
+        # rates against the injected clock ONLY (same base as t_submit /
+        # deadlines) — cross-base arithmetic is exactly the skew this
+        # module's clock injection exists to rule out
+        rates = {"elapsed_s": elapsed}
+        if elapsed > 0:
+            rates["submitted_per_s"] = counters["submitted"] / elapsed
+            rates["completed_per_s"] = counters["completed"] / elapsed
         return {"counters": counters, "latency": lat,
-                "batch_occupancy": occ}
+                "batch_occupancy": occ, "rates": rates}

@@ -146,6 +146,14 @@ class RequestQueue:
         closed) or ``DeadlineExceededError`` (no slot freed within
         ``admission_timeout``) — all in the caller's thread, before any
         queue slot is taken."""
+        return self.put(self.make_request(sample, head)).future
+
+    def make_request(self, sample: dict, head: int = 0) -> Request:
+        """Validate + canonicalize + bin one structure into an admitted
+        ``Request`` WITHOUT enqueuing it. Stamps ``t_submit``/``deadline``
+        on the queue clock. The replica scheduler uses this to validate once
+        in the caller's thread before routing the request to whichever
+        replica's queue it picks (``put``)."""
         if self._closed.is_set():
             raise ServeClosedError("RequestQueue is closed")
         try:
@@ -159,17 +167,23 @@ class RequestQueue:
                 self._metrics.inc("rejected")
             raise
         t_submit = self._clock()
-        req = Request(sample=canon, head=head, bucket=bucket,
-                      n_atoms=n_atoms, n_edges=n_edges, future=Future(),
-                      t_submit=t_submit,
-                      deadline=None if self.max_queue_wait is None
-                      else t_submit + self.max_queue_wait)
+        return Request(sample=canon, head=head, bucket=bucket,
+                       n_atoms=n_atoms, n_edges=n_edges, future=Future(),
+                       t_submit=t_submit,
+                       deadline=None if self.max_queue_wait is None
+                       else t_submit + self.max_queue_wait)
+
+    def put(self, req: Request) -> Request:
+        """Enqueue an already-validated ``Request`` with backpressure.
+        Raises ``ServeClosedError``/``DeadlineExceededError`` like
+        ``submit``; admission-timeout is measured from ``req.t_submit`` so
+        a rerouted request keeps its original budget."""
         while True:
             if self._closed.is_set():
                 raise ServeClosedError("RequestQueue closed while waiting "
                                        "for a free slot")
             if self.admission_timeout is not None and \
-                    self._clock() - t_submit > self.admission_timeout:
+                    self._clock() - req.t_submit > self.admission_timeout:
                 if self._metrics is not None:
                     self._metrics.inc("shed_admission")
                 raise DeadlineExceededError(
@@ -182,7 +196,7 @@ class RequestQueue:
                 continue
         if self._metrics is not None:
             self._metrics.inc("submitted")
-        return req.future
+        return req
 
     def submit_many(self, samples, heads) -> list[Future]:
         """Vector ``submit``: heads may be one int for all samples or a

@@ -224,3 +224,45 @@ def test_session_mixing_shorthands():
         _as_mixing(True)
     with pytest.raises(TypeError, match="ambiguous"):
         _as_bucket_spec(True, None, None)
+
+
+def test_reenabled_source_restarts_with_zero_credit():
+    """ISSUE 10 bugfix: a source coming back from quarantine (weight 0 ->
+    positive) must NOT burst-win early slots off its stale pre-quarantine
+    credit — cumulative counts from the re-enable on must re-track the new
+    ``k*B*w_s`` schedule immediately."""
+    sizes = [60, 60, 60]
+    B = 12
+    mb = MixingBatcher(_sources(sizes), B,
+                       mixing=MixingConfig(emit_source=True), seed=0)
+    for _ in range(5):
+        mb.next_batch()
+    # quarantine source 1: its credit freezes at whatever it had accrued
+    mb.set_weights((1.0, 0.0, 1.0))
+    for _ in range(7):
+        assert 1 not in mb.next_batch()["source_id"]
+    frozen_credit = mb.credit[1]
+    # re-enable: stale credit must be zeroed on the 0 -> positive flip
+    mb.set_weights((1.0, 1.0, 1.0))
+    assert mb.credit[1] == 0.0, \
+        f"stale credit {frozen_credit} survived re-enable"
+    counts = np.zeros(3)
+    for k in range(1, 30):
+        counts += np.bincount(mb.next_batch()["source_id"], minlength=3)
+        # the smooth-round-robin bound, measured from the re-enable only:
+        # a stale-credit burst would blow it in the first few batches
+        assert np.abs(counts - k * B * mb.weights).max() <= len(sizes), \
+            f"post-re-enable schedule drifted at batch {k}: {counts}"
+
+
+def test_set_weights_does_not_touch_live_source_credit():
+    """Only the 0 -> positive transition resets credit: reweighting LIVE
+    sources keeps their diffusion error, so the schedule stays smooth
+    across an ordinary reweight."""
+    mb = MixingBatcher(_sources([40, 40]), 8,
+                       mixing=MixingConfig(emit_source=True), seed=0)
+    for _ in range(3):
+        mb.next_batch()
+    credit_before = mb.credit.copy()
+    mb.set_weights((0.7, 0.3))           # both stay positive
+    np.testing.assert_array_equal(mb.credit, credit_before)

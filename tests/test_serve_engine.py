@@ -18,8 +18,8 @@ from repro.configs.base import ArchConfig
 from repro.core.mtl import make_gfm_mtl
 from repro.data.bucketing import BucketOverflowError, BucketSpec
 from repro.data.synthetic_atoms import generate_mixture, source_dicts
-from repro.serve import (Reservoir, ServeSession, SizeBinnedBatcher,
-                         assemble)
+from repro.serve import (Reservoir, ServeMetrics, ServeSession,
+                         SizeBinnedBatcher, assemble)
 from repro.serve.queue import RequestQueue
 
 CFG = ArchConfig(name="serve-test", family="gnn", gnn_hidden=16,
@@ -385,3 +385,102 @@ def test_from_checkpoint_serves_saved_params(served, tmp_path):
         b = direct.submit(sm, head=3).result(timeout=30)
         assert a["energy"] == b["energy"]
         np.testing.assert_array_equal(a["forces"], b["forces"])
+
+
+# ---------------------------------------------------------------------------
+# ONE clock base (ISSUE 10): queue + batcher + metrics share an injected clock
+# ---------------------------------------------------------------------------
+
+class FakeClock:
+    """Injectable clock offset ~1e6 s from every real clock base."""
+
+    def __init__(self, t0: float = 1e6):
+        self.t = float(t0)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float):
+        self.t += dt
+
+
+def test_one_injected_clock_threads_through_queue_batcher_metrics(served):
+    """Regression for cross-base skew (monotonic deadlines vs perf_counter
+    stamps): ONE fake clock, offset ~1e6 s from both real bases, drives the
+    queue, the batcher, and the metrics. If any of them secretly read a
+    real clock, deadlines/expiry/elapsed would be off by ~1e6 s — bins
+    would expire instantly (or never) and the assertions below would
+    explode rather than drift."""
+    _, sources = served
+    fc = FakeClock(1e6)
+    m = ServeMetrics(clock=fc)
+    q = RequestQueue(SPEC, depth=8, n_heads=5, clock=fc, metrics=m,
+                     max_queue_wait=0.05)
+    b = SizeBinnedBatcher(max_batch=8, max_wait=0.005, clock=fc)
+    q.submit(_sample(sources, 0, 0), head=0)
+    req = q.get(timeout=1.0)
+    assert req.t_submit == 1e6
+    assert req.deadline == pytest.approx(1e6 + 0.05)
+    assert b.add(req) is None
+    # no `now` passed: the batcher must consult the SAME injected clock
+    assert b.expired() == []
+    assert b.next_deadline() == pytest.approx(0.005)
+    fc.advance(0.004)
+    assert b.expired() == []
+    fc.advance(0.002)
+    assert len(b.expired()) == 1
+    fc.advance(10.0)
+    snap = m.snapshot()
+    assert snap["rates"]["elapsed_s"] == pytest.approx(10.006)
+    assert snap["rates"]["submitted_per_s"] == pytest.approx(1 / 10.006)
+
+
+def test_session_deadlines_follow_the_injected_clock_not_wall_time(served):
+    """A frozen fake clock freezes bin expiry: the partial bin flushes only
+    when the INJECTED clock passes max_wait, however much wall time elapses
+    (the worker's poll sleeps on wall time; its deadline math must not)."""
+    params, sources = served
+    fc = FakeClock(5e5)
+    with ServeSession(params, CFG, spec=SPEC, max_batch=4, max_wait_ms=5.0,
+                      clock=fc) as srv:
+        sm = _sample(sources, 0, 0)
+        fut = srv.submit(sm, head=0)
+        time.sleep(0.3)        # 60x max_wait in wall time; fake clock frozen
+        assert not fut.done()
+        fc.advance(0.006)      # past max_wait on the one true clock
+        got = fut.result(timeout=10)
+        ref = srv.predict_one(sm, head=0)
+        assert got["energy"] == ref["energy"]
+        np.testing.assert_array_equal(got["forces"], ref["forces"])
+
+
+def test_shed_decision_uses_the_injected_clock(served):
+    """Two requests stamped at the same fake instant: filed fresh -> binned;
+    filed after the fake clock jumps past their deadline -> shed. Wall time
+    is identical for both, so any divergence is purely the injected base."""
+    from concurrent.futures import Future
+
+    from repro.serve.queue import (DeadlineExceededError, Request,
+                                   _as_sample)
+    params, sources = served
+    fc = FakeClock()
+    srv = ServeSession(params, CFG, spec=SPEC, max_batch=4,
+                       max_queue_wait_ms=50.0, clock=fc)
+    srv.close()                            # worker quiesced; _file is ours
+    canon, n_atoms, n_edges = _as_sample(_sample(sources, 0, 0))
+    bucket = SPEC.bucket_for(n_atoms, n_edges)
+
+    def stamped():
+        return Request(sample=canon, head=0, bucket=bucket,
+                       n_atoms=n_atoms, n_edges=n_edges, future=Future(),
+                       t_submit=fc(), deadline=fc() + 0.05)
+
+    r1, r2 = stamped(), stamped()
+    assert srv._file(r1) is None           # fresh: binned, NOT shed
+    assert srv.batcher.n_pending == 1
+    fc.advance(0.1)                        # both deadlines now in the past
+    assert srv._file(r2) is None           # stale: shed, never binned
+    assert srv.batcher.n_pending == 1
+    with pytest.raises(DeadlineExceededError):
+        r2.future.result(timeout=0)
+    assert srv.stats()["counters"]["shed_deadline"] == 1
